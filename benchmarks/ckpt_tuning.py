@@ -1,0 +1,56 @@
+"""Beyond-paper: the tuner pointed at REAL disk I/O — checkpoint-save
+throughput across (cc, p, pp), offline analysis over genuine measurements,
+and the recommended parameters validated against a fresh grid probe."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint.ckpt import CkptParams, save_checkpoint
+from repro.checkpoint.tuning import CheckpointTuner
+
+
+def _tree(mb: float = 96.0, n_arrays: int = 24, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    per = int(mb * 1e6 / n_arrays / 4)
+    return {f"layer{i:02d}": {"w": rng.normal(size=per).astype(np.float32)}
+            for i in range(n_arrays)}
+
+
+def run() -> dict:
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        log = os.path.join(d, "transfers.jsonl")
+        tuner = CheckpointTuner(log)
+        probes = tuner.seed_history(tree, os.path.join(d, "seed"),
+                                    n_probes=16)
+        tuner.fit()
+        rec = tuner.recommend()
+        # validate: measure the recommendation + a naive default
+        got = save_checkpoint(os.path.join(d, "val"), 1, tree,
+                              params=rec, log_path=log)
+        naive = save_checkpoint(os.path.join(d, "val"), 2, tree,
+                                params=CkptParams(1, 1, 1), log_path=log)
+        best_seen = max(p["throughput_mbps"] for p in probes)
+    return {
+        "recommended": (rec.cc, rec.p, rec.pp),
+        "recommended_mbps": got["throughput_mbps"],
+        "naive_mbps": naive["throughput_mbps"],
+        "best_probe_mbps": best_seen,
+        "speedup_vs_naive": got["throughput_mbps"] / naive["throughput_mbps"],
+    }
+
+
+def main():
+    out = run()
+    print(f"ckpt_tuning_recommended,0,cc/p/pp={out['recommended']} "
+          f"{out['recommended_mbps']:.0f}Mbps")
+    print(f"ckpt_tuning_speedup,0,{out['speedup_vs_naive']:.2f}x vs cc=p=pp=1 "
+          f"(best probe {out['best_probe_mbps']:.0f}Mbps)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

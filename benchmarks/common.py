@@ -1,0 +1,44 @@
+"""Shared benchmark scaffolding."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import TransferTuner, TunerConfig
+from repro.core.baselines import ALL_BASELINES, run_transfer
+from repro.netsim import generate_history, make_testbed, ParamBounds
+
+
+def build_world(testbed: str, *, days: float = 14.0, per_day: int = 200,
+                seed: int = 0):
+    """History + fitted ASM tuner + baseline tuners for one testbed."""
+    env = make_testbed(testbed, seed=seed + 3)
+    hist = generate_history(env, days=days, transfers_per_day=per_day,
+                            seed=seed)
+    asm = TransferTuner(TunerConfig(seed=seed)).fit(hist)
+    baselines = {}
+    for name, cls in ALL_BASELINES.items():
+        baselines[name] = cls(hist) if name in ("SP", "ANN+OT", "HARP") \
+            else cls()
+    return hist, asm, baselines
+
+
+def run_model(name, tuner, asm, env, ds):
+    if name == "ASM":
+        return asm.transfer(env, ds)
+    return run_transfer(tuner, env, ds)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def csv_row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,71 @@
+"""Fig 6: throughput-prediction accuracy (Eq. 25) vs number of sample
+transfers, ASM vs HARP vs ANN+OT."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_world
+from repro.core import TransferTuner, TunerConfig
+from repro.core.baselines import ANNOT, HARP, run_transfer
+from repro.netsim import make_dataset, make_testbed
+
+
+def _harp_accuracy(hist, n_probes, seeds):
+    accs = []
+    for s in seeds:
+        env = make_testbed("xsede", seed=200 + s)
+        env.clock_s = 5 * 3600 + s * 997
+        ds = make_dataset(["small", "medium", "large"][s % 3], 60 + s)
+        t = HARP(hist, n_probes=max(n_probes, 1))
+        rep = run_transfer(t, env, ds)
+        # HARP's prediction = its refit regression's forecast at the argmax
+        ach = rep.steady_mbps
+        pred = max(t.predicted_mbps, 1e-6)
+        accs.append(max(0.0, 100 * (1 - abs(ach - pred) / max(pred, ach))))
+    return float(np.mean(accs))
+
+
+def run() -> dict:
+    hist, _, _ = build_world("xsede", seed=0)
+    out = {"ASM": {}, "HARP": {}, "ANN+OT": {}}
+    seeds = list(range(9))
+    for n in (1, 2, 3, 4, 5):
+        tuner = TransferTuner(TunerConfig(seed=0, max_samples=n)).fit(hist)
+        accs = []
+        for s in seeds:
+            env = make_testbed("xsede", seed=200 + s)
+            env.clock_s = 5 * 3600 + s * 997
+            ds = make_dataset(["small", "medium", "large"][s % 3], 60 + s)
+            rep = tuner.transfer(env, ds)
+            accs.append(rep.prediction_accuracy)
+        out["ASM"][n] = float(np.mean(accs))
+        out["HARP"][n] = _harp_accuracy(hist, n, seeds)
+    # ANN+OT: fixed single probe + online rescale; accuracy is sample-count
+    # independent past 1 (reported flat, as in the paper)
+    annot = ANNOT(hist)
+    accs = []
+    for s in seeds:
+        env = make_testbed("xsede", seed=200 + s)
+        env.clock_s = 5 * 3600 + s * 997
+        ds = make_dataset(["small", "medium", "large"][s % 3], 60 + s)
+        rep = run_transfer(annot, env, ds)
+        ach = rep.steady_mbps
+        pred = max(annot._best_pred, 1e-6)   # raw historical forecast
+        accs.append(max(0.0, 100 * (1 - abs(ach - pred) / max(pred, ach))))
+    for n in (1, 2, 3, 4, 5):
+        out["ANN+OT"][n] = float(np.mean(accs))
+    return out
+
+
+def main():
+    out = run()
+    for model, curve in out.items():
+        pts = " ".join(f"{n}:{v:.1f}" for n, v in sorted(curve.items()))
+        print(f"fig6_{model},0,{pts}")
+    asm3 = out["ASM"][3]
+    print(f"fig6_summary,0,ASM@3samples={asm3:.1f}% (paper: ~93%)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure plus the
+beyond-paper checkpoint-tuning benchmark and kernel micros.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig3b", "benchmarks.fig3b_surfaces"),
+    ("fig5", "benchmarks.fig5_throughput"),
+    ("fig6", "benchmarks.fig6_accuracy"),
+    ("fig7", "benchmarks.fig7_periodic"),
+    ("convergence", "benchmarks.tab_convergence"),
+    ("ckpt", "benchmarks.ckpt_tuning"),
+    ("kernels", "benchmarks.kernels_bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+            print(f"bench_{key}_wall,{(time.perf_counter() - t0) * 1e6:.0f},ok")
+        except Exception as e:
+            failures += 1
+            print(f"bench_{key}_wall,0,FAILED {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

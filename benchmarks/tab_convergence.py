@@ -1,0 +1,49 @@
+"""Convergence-overhead comparison (Sec. 4 discussion): samples used,
+parameter changes, time lost to probing, online decision latency."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_world, run_model
+from repro.netsim import make_dataset, make_testbed
+
+MODELS = ["SC", "ANN+OT", "NMT", "HARP", "ASM"]
+
+
+def run(repeats: int = 4) -> dict:
+    hist, asm, baselines = build_world("xsede", seed=0)
+    out = {}
+    for name in MODELS:
+        n_samples, changes, decision_us = [], [], []
+        for r in range(repeats):
+            env = make_testbed("xsede", seed=400 + r)
+            env.clock_s = 7 * 3600 + 311 * r
+            ds = make_dataset("medium", 90 + r)
+            t0 = time.perf_counter()
+            rep = run_model(name, baselines.get(name), asm, env, ds)
+            decision_us.append((time.perf_counter() - t0) * 1e6)
+            n_samples.append(rep.n_samples)
+            changes.append(rep.param_changes)
+        out[name] = {
+            "samples": float(np.mean(n_samples)),
+            "param_changes": float(np.mean(changes)),
+            "host_us": float(np.mean(decision_us)),
+        }
+    return out
+
+
+def main():
+    out = run()
+    for name, row in out.items():
+        print(f"tab_convergence_{name},{row['host_us']:.0f},"
+              f"samples={row['samples']:.1f} changes={row['param_changes']:.1f}")
+    assert out["ASM"]["samples"] <= 3.01, "ASM must converge within 3 samples"
+    assert out["NMT"]["samples"] >= out["ASM"]["samples"], \
+        "NMT should need more probes than ASM"
+    return out
+
+
+if __name__ == "__main__":
+    main()

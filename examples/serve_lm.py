@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with a
+shared KV cache — greedy sampling, per-step latency stats.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, "smoke")
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, _ = model.init(key)
+
+    B = args.batch
+    shape = (B, args.prompt_len, cfg.n_codebooks) if cfg.n_codebooks \
+        else (B, args.prompt_len)
+    prompts = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    cache, _ = model.init_cache(B, args.prompt_len + args.tokens + 4)
+
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(model.prefill)(params, prompts, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(model.decode)
+    tok = jnp.argmax(logits, axis=-1)
+    if cfg.n_codebooks:
+        tok = tok.reshape(B, 1, cfg.n_codebooks)
+    else:
+        tok = tok.reshape(B, 1)
+    out = [tok]
+    lat = []
+    for i in range(args.tokens - 1):
+        t0 = time.perf_counter()
+        logits, cache = decode(params, tok, cache)
+        jax.block_until_ready(logits)
+        lat.append(time.perf_counter() - t0)
+        tok = jnp.argmax(logits, axis=-1)
+        tok = tok.reshape((B, 1, cfg.n_codebooks) if cfg.n_codebooks
+                          else (B, 1))
+        out.append(tok)
+
+    seq = jnp.concatenate(out, axis=1)
+    lat = np.array(lat[1:]) * 1e3            # skip the compile step
+    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len}")
+    print(f"prefill: {t_prefill * 1e3:.1f} ms "
+          f"({B * args.prompt_len / t_prefill:.0f} tok/s)")
+    print(f"decode:  p50={np.percentile(lat, 50):.2f} ms "
+          f"p99={np.percentile(lat, 99):.2f} ms per step "
+          f"({B * 1e3 / np.percentile(lat, 50):.0f} tok/s)")
+    print(f"generated shape: {seq.shape}; sample ids: "
+          f"{np.asarray(seq)[0].ravel()[:8]}")
+
+
+if __name__ == "__main__":
+    main()

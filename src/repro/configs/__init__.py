@@ -1,0 +1,33 @@
+"""Architecture configs.  Each module exposes ``full()`` (the published
+configuration) and ``smoke()`` (a reduced same-family config for CPU tests).
+
+Select with ``--arch <id>`` in the launchers, or ``get_config(id)`` here.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "zamba2_7b", "qwen2_5_32b", "minitron_4b", "internlm2_20b",
+    "llama3_405b", "deepseek_v3_671b", "mixtral_8x22b", "musicgen_large",
+    "rwkv6_1_6b", "qwen2_vl_2b",
+]
+
+# canonical dashed names from the assignment table
+ALIASES = {
+    "zamba2-7b": "zamba2_7b", "qwen2.5-32b": "qwen2_5_32b",
+    "minitron-4b": "minitron_4b", "internlm2-20b": "internlm2_20b",
+    "llama3-405b": "llama3_405b", "deepseek-v3-671b": "deepseek_v3_671b",
+    "mixtral-8x22b": "mixtral_8x22b", "musicgen-large": "musicgen_large",
+    "rwkv6-1.6b": "rwkv6_1_6b", "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+
+def get_config(arch: str, variant: str = "full"):
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return getattr(mod, variant)()
+
+
+def all_archs() -> list[str]:
+    return list(ALIASES.keys())

@@ -1,0 +1,136 @@
+"""ANN+OT: neural-network throughput prediction over historical logs plus
+online tuning (Nine, Guner & Kosar, NDM'15 [44]).
+
+A small MLP (pure JAX, trained with Adam here) learns
+th = g(bw, rtt, avg_file, n_files, cc, p, pp) from the history.  At transfer
+time the model's grid argmax seeds the first sample; online tuning then
+rescales predictions by the observed/predicted ratio and re-optimizes — the
+paper's critique being that it "always tends to choose the maxima from
+historical log rather than the global one".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines.common import BaseTuner
+from repro.netsim.environment import Environment, ParamBounds, TransferParams
+from repro.netsim.loggen import LogEntry
+from repro.netsim.workload import Dataset
+
+
+def _feats(bw, rtt, avg_mb, n_files, cc, p, pp):
+    return np.stack([
+        np.log10(bw) / 4.0, np.log10(np.maximum(rtt, 1e-5)) / 3.0,
+        np.log10(np.maximum(avg_mb, 1e-2)) / 4.0,
+        np.log10(np.maximum(n_files, 1)) / 4.0,
+        cc / 16.0, p / 16.0, pp / 16.0,
+        (cc * p) / 256.0,
+    ], axis=-1).astype(np.float32)
+
+
+def _init_mlp(key, sizes):
+    params = []
+    for i, (m, n) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        params.append((jax.random.normal(sub, (m, n)) * jnp.sqrt(2.0 / m),
+                       jnp.zeros((n,))))
+    return params
+
+
+def _mlp(params, x):
+    for i, (W, b) in enumerate(params):
+        x = x @ W + b
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+@jax.jit
+def _loss(params, X, y):
+    pred = _mlp(params, X)
+    return jnp.mean((pred - y) ** 2)
+
+
+@jax.jit
+def _adam_step(params, m, v, t, X, y, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    g = jax.grad(_loss)(params, X, y)
+    m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+    v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+    mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p_, a, b: p_ - lr * a / (jnp.sqrt(b) + eps),
+                          params, mh, vh)
+    return params, m, v
+
+
+class ANNOT(BaseTuner):
+    name = "ANN+OT"
+
+    def __init__(self, history: list[LogEntry],
+                 bounds: ParamBounds = ParamBounds(), *,
+                 epochs: int = 300, seed: int = 0):
+        super().__init__(bounds)
+        X = _feats(
+            np.array([e.bandwidth_mbps for e in history]),
+            np.array([e.rtt_s for e in history]),
+            np.array([e.avg_file_mb for e in history]),
+            np.array([e.n_files for e in history]),
+            np.array([e.cc for e in history], np.float64),
+            np.array([e.p for e in history], np.float64),
+            np.array([e.pp for e in history], np.float64))
+        y = np.array([e.throughput_mbps for e in history], np.float32)
+        self._yscale = float(max(y.max(), 1.0))
+        y = y / self._yscale
+        params = _init_mlp(jax.random.PRNGKey(seed), [X.shape[1], 64, 64, 1])
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+        for t in range(1, epochs + 1):
+            params, m, v = _adam_step(params, m, v, t, Xj, yj)
+        self.params = params
+        self.train_mse = float(_loss(params, Xj, yj))
+        self._scale = 1.0       # online-tuning rescale factor
+        self._grid_cache: TransferParams | None = None
+
+    # ------------------------------------------------------------------ #
+    def _grid_argmax(self, env: Environment, dataset: Dataset) -> TransferParams:
+        b = self.bounds
+        combos = np.array([[cc, p, pp]
+                           for cc in range(1, b.max_cc + 1)
+                           for p in range(1, b.max_p + 1)
+                           for pp in range(1, b.max_pp + 1)], np.float64)
+        X = _feats(np.full(len(combos), env.link.bandwidth_mbps),
+                   np.full(len(combos), env.link.rtt_s),
+                   np.full(len(combos), dataset.avg_file_mb),
+                   np.full(len(combos), dataset.n_files),
+                   combos[:, 0], combos[:, 1], combos[:, 2])
+        pred = np.asarray(_mlp(self.params, jnp.asarray(X)))
+        k = int(np.argmax(pred))
+        self._best_pred = float(pred[k]) * self._yscale
+        return TransferParams(int(combos[k, 0]), int(combos[k, 1]),
+                              int(combos[k, 2]))
+
+    @property
+    def n_probe_chunks(self) -> int:
+        return 1
+
+    def start(self, env: Environment, dataset: Dataset) -> TransferParams:
+        self._scale = 1.0
+        self._env, self._dataset = env, dataset
+        self._grid_cache = self._grid_argmax(env, dataset)
+        return self._grid_cache
+
+    def observe(self, params: TransferParams, achieved: float,
+                chunk_idx: int) -> TransferParams:
+        # online tuning: rescale the learned surface by observed/predicted
+        # and nudge concurrency against the residual
+        if self._best_pred > 1e-6:
+            self._scale = achieved / self._best_pred
+        if self._scale < 0.7 and chunk_idx == 0:
+            # heavier load than history: back off total streams
+            cc = max(1, int(params.cc * max(self._scale, 0.4)))
+            return TransferParams(cc, params.p, params.pp)
+        return params

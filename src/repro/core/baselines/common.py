@@ -1,0 +1,68 @@
+"""Shared baseline scaffolding: a tuner proposes parameters per chunk; the
+runner executes the chunked transfer and reports whole-transfer throughput."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.online import SampleRecord, TransferReport
+from repro.netsim.environment import Environment, ParamBounds, TransferParams
+from repro.netsim.workload import Dataset
+
+
+class BaseTuner:
+    """Interface: propose initial params, then react to achieved throughput."""
+
+    name = "base"
+
+    def __init__(self, bounds: ParamBounds = ParamBounds()):
+        self.bounds = bounds
+
+    def start(self, env: Environment, dataset: Dataset) -> TransferParams:
+        raise NotImplementedError
+
+    def observe(self, params: TransferParams, achieved: float,
+                chunk_idx: int) -> TransferParams:
+        """Return params for the next chunk (possibly unchanged)."""
+        return params
+
+    @property
+    def n_probe_chunks(self) -> int:
+        """Chunks the tuner spends probing before committing (0 = static)."""
+        return 0
+
+
+def run_transfer(tuner: BaseTuner, env: Environment, dataset: Dataset,
+                 *, n_chunks: int = 8) -> TransferReport:
+    """Chunked transfer driven by a baseline tuner."""
+    t0 = env.clock_s
+    records: list[SampleRecord] = []
+    params = tuner.start(env, dataset).clip(tuner.bounds)
+    probe = tuner.n_probe_chunks
+    chunks = dataset.sample_chunks(n_chunks + probe)
+    probe_mb, bulk_mb = chunks[0], sum(chunks[probe:])
+    param_changes = 0
+    # probe phase
+    for i in range(probe):
+        res = env.transfer(params, probe_mb, dataset.avg_file_mb,
+                           dataset.n_files, is_sample=True)
+        records.append(SampleRecord(params, 0.0, res.steady_mbps, -1.0,
+                                    res.elapsed_s, True))
+        nxt = tuner.observe(params, res.steady_mbps, i).clip(tuner.bounds)
+        if nxt.as_tuple() != params.as_tuple():
+            param_changes += 1
+        params = nxt
+    # bulk phase
+    chunk_mb = bulk_mb / n_chunks
+    for i in range(n_chunks):
+        res = env.transfer(params, chunk_mb, dataset.avg_file_mb,
+                           dataset.n_files)
+        records.append(SampleRecord(params, 0.0, res.steady_mbps, -1.0,
+                                    res.elapsed_s, False))
+        nxt = tuner.observe(params, res.steady_mbps, probe + i).clip(tuner.bounds)
+        if nxt.as_tuple() != params.as_tuple():
+            param_changes += 1
+        params = nxt
+    total_s = env.clock_s - t0
+    return TransferReport(params, dataset.total_mb * 8.0 / max(total_s, 1e-9),
+                          records, n_samples=probe, total_s=total_s,
+                          param_changes=param_changes)

@@ -1,0 +1,149 @@
+"""Hierarchical clustering of historical logs (Sec. 3.1, Eqs. 2-5).
+
+Implements both algorithms the paper evaluates:
+  * K-means++ seeding + Lloyd iterations (O(log m)-competitive seeding),
+  * HAC with UPGMA linkage over centroid distance (Eq. 2),
+with the Calinski-Harabasz index (Eq. 3) for model-order selection.
+
+Pure numpy: this is offline control-plane work over a few thousand log rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def kmeans_pp_init(X: np.ndarray, m: int, rng: np.random.Generator) -> np.ndarray:
+    """K-means++ seeding (Arthur & Vassilvitskii 2007)."""
+    n = X.shape[0]
+    centers = [X[rng.integers(n)]]
+    for _ in range(1, m):
+        d2 = np.min(((X[:, None, :] - np.asarray(centers)[None]) ** 2).sum(-1), axis=1)
+        total = d2.sum()
+        if not np.isfinite(total) or total <= 1e-12:
+            # degenerate data (all points coincide): uniform seeding
+            centers.append(X[rng.integers(n)])
+            continue
+        centers.append(X[rng.choice(n, p=d2 / total)])
+    return np.asarray(centers)
+
+
+def kmeans(X: np.ndarray, m: int, *, iters: int = 50,
+           seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """K-means++ clustering -> (labels (n,), centroids (m, d))."""
+    rng = np.random.default_rng(seed)
+    C = kmeans_pp_init(X, m, rng)
+    labels = np.zeros(X.shape[0], np.int64)
+    for _ in range(iters):
+        d2 = ((X[:, None, :] - C[None]) ** 2).sum(-1)
+        new = d2.argmin(1)
+        if np.array_equal(new, labels) and _ > 0:
+            break
+        labels = new
+        for k in range(m):
+            mask = labels == k
+            if mask.any():
+                C[k] = X[mask].mean(0)
+    return labels, C
+
+
+def hac_upgma(X: np.ndarray, m: int) -> np.ndarray:
+    """Agglomerative clustering, UPGMA update, centroid distance (Eq. 2).
+
+    Merges the closest cluster pair until ``m`` clusters remain; the proximity
+    matrix row/column of the merged pair is refreshed with the new centroid.
+    """
+    n = X.shape[0]
+    active = list(range(n))
+    centroid = {i: X[i].copy() for i in range(n)}
+    size = {i: 1 for i in range(n)}
+    members: dict[int, list[int]] = {i: [i] for i in range(n)}
+    # proximity matrix over active clusters
+    D = np.full((n, n), np.inf)
+    for i in range(n):
+        d = np.sqrt(((X - X[i]) ** 2).sum(-1))
+        D[i] = d
+        D[i, i] = np.inf
+    nxt = n
+    while len(active) > m:
+        sub = np.ix_(active, active)
+        flat = D[sub]
+        a_idx, b_idx = np.unravel_index(np.argmin(flat), flat.shape)
+        a, b = active[a_idx], active[b_idx]
+        # UPGMA: new centroid is the size-weighted mean of the merged pair.
+        ca = (size[a] * centroid[a] + size[b] * centroid[b]) / (size[a] + size[b])
+        centroid[nxt] = ca
+        size[nxt] = size[a] + size[b]
+        members[nxt] = members[a] + members[b]
+        active.remove(a); active.remove(b)
+        if nxt >= D.shape[0]:
+            D = np.pad(D, ((0, n), (0, n)), constant_values=np.inf)
+        for o in active:
+            D[nxt, o] = D[o, nxt] = np.sqrt(((ca - centroid[o]) ** 2).sum())
+        D[nxt, nxt] = np.inf
+        active.append(nxt)
+        nxt += 1
+    labels = np.zeros(n, np.int64)
+    for k, cid in enumerate(active):
+        labels[members[cid]] = k
+    return labels
+
+
+def ch_index(X: np.ndarray, labels: np.ndarray) -> float:
+    """Calinski-Harabasz index (Eq. 3): between/within variance ratio."""
+    n = X.shape[0]
+    ks = np.unique(labels)
+    m = len(ks)
+    if m < 2 or m >= n:
+        return -np.inf
+    overall = X.mean(0)
+    between = 0.0
+    within = 0.0
+    for k in ks:
+        pts = X[labels == k]
+        c = pts.mean(0)
+        between += len(pts) * ((c - overall) ** 2).sum()
+        within += ((pts - c) ** 2).sum()
+    if within <= 1e-12:
+        return np.inf
+    return float((between / (m - 1)) / (within / (n - m)))
+
+
+@dataclasses.dataclass
+class ClusterModel:
+    labels: np.ndarray
+    centroids: np.ndarray
+    m: int
+    method: str
+    ch: float
+
+    def assign(self, x: np.ndarray) -> int:
+        """Nearest-centroid assignment for a new feature vector."""
+        return int(((self.centroids - x[None]) ** 2).sum(-1).argmin())
+
+
+def fit_clusters(X: np.ndarray, *, m_range: range | None = None,
+                 method: str = "kmeans++", seed: int = 0) -> ClusterModel:
+    """Cluster with CH-index model-order selection (largest CH wins)."""
+    n = X.shape[0]
+    if m_range is None:
+        m_range = range(2, min(9, max(3, n // 8)))
+    best: ClusterModel | None = None
+    for m in m_range:
+        if m >= n:
+            break
+        if method == "kmeans++":
+            labels, _ = kmeans(X, m, seed=seed)
+        elif method == "hac":
+            labels = hac_upgma(X, m)
+        else:
+            raise ValueError(f"unknown clustering method: {method}")
+        score = ch_index(X, labels)
+        cents = np.stack([X[labels == k].mean(0) if (labels == k).any()
+                          else X.mean(0) for k in range(m)])
+        cand = ClusterModel(labels, cents, m, method, score)
+        if best is None or score > best.ch:
+            best = cand
+    assert best is not None, "need at least 3 points to cluster"
+    return best

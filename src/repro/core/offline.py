@@ -1,0 +1,112 @@
+"""Offline knowledge-discovery phase (Sec. 3.1).
+
+Pipeline per fit: cluster logs hierarchically -> per cluster, bin entries by
+external load intensity -> fit a confidence-banded spline surface per bin ->
+precompute maxima -> identify sampling regions.  The result is an
+``OfflineDB`` the online phase queries in O(#clusters) time.
+
+The model is *additive* (Sec. 3: "when new logs are generated ... we do not
+need to combine it with previous logs and perform analysis on whole log"):
+``OfflineDB.update(new_entries)`` routes new entries to their nearest cluster
+and refits only the touched (cluster, bin) surfaces, keeping raw per-cluster
+entry stores so grid aggregation stays exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.clustering import ClusterModel, fit_clusters
+from repro.core.contention import (
+    intensity_bins, load_intensity, residual_intensity_bins,
+)
+from repro.core.regions import SamplingRegion, identify_sampling_regions
+from repro.core.surfaces import ThroughputSurface, fit_surface
+from repro.netsim.environment import ParamBounds
+from repro.netsim.loggen import LogEntry
+
+
+@dataclasses.dataclass
+class ClusterKnowledge:
+    """Everything the online phase needs about one cluster."""
+    centroid: np.ndarray
+    surfaces: list[ThroughputSurface]      # sorted ascending by load intensity
+    region: SamplingRegion
+    entries: list[LogEntry]                # raw store for additive refits
+    dirty: bool = False
+
+    def sorted_by_load(self) -> list[ThroughputSurface]:
+        return sorted(self.surfaces, key=lambda s: s.load_intensity)
+
+
+@dataclasses.dataclass
+class OfflineDB:
+    clusters: list[ClusterKnowledge]
+    cluster_model: ClusterModel
+    bounds: ParamBounds
+    n_load_bins: int
+    fit_seconds: float
+
+    # ------------------------------------------------------------------ #
+    def query(self, features: np.ndarray) -> ClusterKnowledge:
+        """Nearest-cluster lookup — the online module's constant-time query."""
+        k = self.cluster_model.assign(np.asarray(features, np.float64))
+        return self.clusters[k]
+
+    # ------------------------------------------------------------------ #
+    def update(self, new_entries: list[LogEntry]) -> None:
+        """Additive refresh: only touched (cluster, bin) surfaces are refit."""
+        touched = set()
+        for e in new_entries:
+            k = self.cluster_model.assign(e.features())
+            self.clusters[k].entries.append(e)
+            touched.add(k)
+        for k in touched:
+            ck = self.clusters[k]
+            ck.surfaces = _fit_cluster_surfaces(ck.entries, self.n_load_bins,
+                                                self.bounds)
+            ck.region = identify_sampling_regions(ck.surfaces, self.bounds)
+            ck.dirty = False
+
+
+def _fit_cluster_surfaces(entries: list[LogEntry], n_load_bins: int,
+                          bounds: ParamBounds) -> list[ThroughputSurface]:
+    n_bins = max(1, min(n_load_bins, len(entries) // 24))
+    if n_bins <= 1 or len(entries) < 16:
+        return [fit_surface(entries, float(np.mean(
+            [load_intensity(e) for e in entries])), bounds)]
+    # load-agnostic base surface, used to explain away parameter effects
+    base = fit_surface(entries, 0.5, bounds)
+    bin_idx, centers = residual_intensity_bins(entries, n_bins, base.surface)
+    out = []
+    for b in range(n_bins):
+        sel = [e for e, i in zip(entries, bin_idx) if i == b]
+        if len(sel) < 8:
+            continue
+        out.append(fit_surface(sel, centers[b], bounds))
+    if not out:  # degenerate cluster: single surface over everything
+        out.append(base)
+    return sorted(out, key=lambda s: s.load_intensity)
+
+
+def offline_analysis(entries: list[LogEntry], *,
+                     bounds: ParamBounds = ParamBounds(),
+                     n_load_bins: int = 5,
+                     clustering: str = "kmeans++",
+                     seed: int = 0) -> OfflineDB:
+    """Full offline phase over a historical log."""
+    t0 = time.perf_counter()
+    X = np.stack([e.features() for e in entries])
+    cm = fit_clusters(X, method=clustering, seed=seed)
+    clusters: list[ClusterKnowledge] = []
+    for k in range(cm.m):
+        sel = [e for e, l in zip(entries, cm.labels) if l == k]
+        if not sel:
+            sel = entries[:8]
+        surfaces = _fit_cluster_surfaces(sel, n_load_bins, bounds)
+        region = identify_sampling_regions(surfaces, bounds, seed=seed + k)
+        clusters.append(ClusterKnowledge(cm.centroids[k], surfaces, region, sel))
+    return OfflineDB(clusters, cm, bounds, n_load_bins,
+                     time.perf_counter() - t0)

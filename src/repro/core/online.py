@@ -1,0 +1,208 @@
+"""Online adaptive sampling (Algorithm 1, Sec. 3.2).
+
+On a transfer request: query the offline DB for the matching cluster, sort its
+surfaces by external load intensity, and start from the *median*-load
+surface's precomputed argmax.  Each sample transfer's achieved throughput is
+checked against the surface's Gaussian confidence band; a miss jumps to the
+closest surface in the direction the miss indicates (lighter load if we
+overshot the band, heavier if we undershot), eliminating about half of the
+candidate surfaces per probe.  After convergence the rest of the dataset is
+transferred chunk-by-chunk with the converged parameters, re-triggering the
+surface search if mid-transfer throughput drifts out of band (the paper's
+"harsh network change" detection).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.offline import ClusterKnowledge, OfflineDB
+from repro.core.surfaces import ThroughputSurface
+from repro.netsim.environment import Environment, TransferParams
+from repro.netsim.workload import Dataset
+
+
+@dataclasses.dataclass
+class SampleRecord:
+    params: TransferParams
+    predicted: float
+    achieved: float
+    surface_load: float
+    elapsed_s: float
+    was_sample: bool
+
+
+@dataclasses.dataclass
+class TransferReport:
+    params: TransferParams          # converged parameters
+    achieved_mbps: float            # whole-transfer effective throughput
+    samples: list[SampleRecord]
+    n_samples: int
+    total_s: float
+    param_changes: int
+
+    @property
+    def predicted_mbps(self) -> float:
+        return self.samples[-1].predicted if self.samples else 0.0
+
+    @property
+    def steady_mbps(self) -> float:
+        """Time-weighted steady rate of the bulk phase (excludes probing)."""
+        bulk = [r for r in self.samples if not r.was_sample]
+        if not bulk:
+            return self.achieved_mbps
+        w = sum(r.elapsed_s for r in bulk)
+        return sum(r.achieved * r.elapsed_s for r in bulk) / max(w, 1e-9)
+
+    @property
+    def prediction_accuracy(self) -> float:
+        """Eq. 25 accuracy of the converged surface's prediction (%)."""
+        bulk = [r for r in self.samples if not r.was_sample]
+        if not bulk:
+            return 0.0
+        pred = max(bulk[-1].predicted, 1e-9)
+        ach = self.steady_mbps
+        return float(max(0.0, 100.0 * (1.0 - abs(ach - pred) / max(pred, ach))))
+
+
+def _closest_surface(surfaces: list[ThroughputSurface], prm: TransferParams,
+                     achieved: float, *, lighter: bool | None
+                     ) -> ThroughputSurface:
+    """FindClosestSurface: surface whose value at the probed point is nearest
+    to the achieved throughput, restricted to the load direction implied by
+    the band miss (lighter=True -> lower I_s tags only)."""
+    if lighter is True:
+        cand = sorted(surfaces, key=lambda s: s.load_intensity)
+        mid = [s for s in cand if s.predict(prm) <= achieved]
+        cand = mid or cand
+    elif lighter is False:
+        cand = [s for s in sorted(surfaces, key=lambda s: s.load_intensity)
+                if s.predict(prm) >= achieved] or surfaces
+    else:
+        cand = surfaces
+    return min(cand, key=lambda s: abs(s.predict(prm) - achieved))
+
+
+class AdaptiveSampler:
+    """The paper's Adaptive Sampling Module (ASM)."""
+
+    def __init__(self, db: OfflineDB, *, z: float = 2.0, max_samples: int = 3,
+                 bulk_chunks: int = 8):
+        self.db = db
+        self.z = z
+        self.max_samples = max_samples
+        self.bulk_chunks = bulk_chunks
+
+    # ------------------------------------------------------------------ #
+    def converge(self, env: Environment, dataset: Dataset,
+                 cluster: ClusterKnowledge,
+                 records: list[SampleRecord]) -> ThroughputSurface:
+        """Probe phase: locate the surface matching current external load.
+
+        Sample 1 goes to the most *discriminative* point of the precomputed
+        sampling region R_c (Sec. 3.1.4) — the coordinate where the cluster's
+        surfaces are maximally separated — which identifies the load level in
+        a single probe.  Subsequent samples run the Algorithm-1 loop: probe
+        the current surface's argmax, check the Gaussian band, and jump to the
+        closest surface on a miss (discarding half the stack each time).
+        """
+        surfaces = cluster.sorted_by_load()
+        probe_mb = dataset.sample_chunks(self.bulk_chunks + self.max_samples)[0]
+        cur = surfaces[len(surfaces) // 2]          # median load intensity
+        remaining = list(surfaces)
+        budget = self.max_samples
+
+        # --- sample 1: discriminative probe from R_c ------------------- #
+        region = cluster.region
+        if len(surfaces) > 1 and region.discriminative_points:
+            prm = region.discriminative_points[0]
+            res = env.transfer(prm, probe_mb, dataset.avg_file_mb,
+                               dataset.n_files, is_sample=True)
+            achieved = res.steady_mbps
+            cur = min(surfaces, key=lambda s: abs(s.predict(prm) - achieved))
+            records.append(SampleRecord(prm, cur.predict(prm), achieved,
+                                        cur.load_intensity, res.elapsed_s,
+                                        True))
+            budget -= 1
+
+        # --- Algorithm-1 loop over surface argmaxima ------------------- #
+        for _ in range(budget):
+            prm = cur.argmax_params
+            res = env.transfer(prm, probe_mb, dataset.avg_file_mb,
+                               dataset.n_files, is_sample=True)
+            achieved = res.steady_mbps     # monitored steady rate, post-ramp
+            predicted = cur.predict(prm)
+            records.append(SampleRecord(prm, predicted, achieved,
+                                        cur.load_intensity, res.elapsed_s, True))
+            if cur.in_confidence(prm, achieved, self.z):
+                break                                # converged
+            lighter = cur.above_band(prm, achieved, self.z)
+            # discard the half of the stack on the wrong side of cur
+            if lighter:
+                remaining = [s for s in remaining
+                             if s.load_intensity <= cur.load_intensity]
+            else:
+                remaining = [s for s in remaining
+                             if s.load_intensity >= cur.load_intensity]
+            nxt = _closest_surface(remaining or surfaces, prm, achieved,
+                                   lighter=lighter)
+            if nxt is cur:
+                break
+            cur = nxt
+        return cur
+
+    # ------------------------------------------------------------------ #
+    def transfer(self, env: Environment, dataset: Dataset) -> TransferReport:
+        features = _request_features(env, dataset)
+        cluster = self.db.query(features)
+        records: list[SampleRecord] = []
+        t0 = env.clock_s
+        surface = self.converge(env, dataset, cluster, records)
+        params = surface.argmax_params
+        param_changes = len({r.params.as_tuple() for r in records})
+
+        # bulk phase: chunked transfer with drift detection
+        sampled_mb = len(records) * dataset.sample_chunks(
+            self.bulk_chunks + self.max_samples)[0]
+        remaining = max(dataset.total_mb - sampled_mb, 0.0)
+        chunk_mb = remaining / self.bulk_chunks
+        surfaces = cluster.sorted_by_load()
+        strikes = 0
+        for _ in range(self.bulk_chunks):
+            if chunk_mb <= 0:
+                break
+            res = env.transfer(params, chunk_mb, dataset.avg_file_mb,
+                               dataset.n_files)
+            achieved = res.steady_mbps
+            records.append(SampleRecord(params, surface.predict(params),
+                                        achieved, surface.load_intensity,
+                                        res.elapsed_s, False))
+            if not surface.in_confidence(params, achieved, self.z):
+                # Require two consecutive out-of-band chunks before acting:
+                # re-parameterizing on a single noisy reading costs a process
+                # respawn + slow start (Sec. 3.2: changes are expensive).
+                strikes += 1
+                if strikes >= 2:
+                    surface = _closest_surface(
+                        surfaces, params, achieved,
+                        lighter=surface.above_band(params, achieved, self.z))
+                    if surface.argmax_params.as_tuple() != params.as_tuple():
+                        params = surface.argmax_params
+                        param_changes += 1
+                    strikes = 0
+            else:
+                strikes = 0
+        total_s = env.clock_s - t0
+        achieved_total = dataset.total_mb * 8.0 / max(total_s, 1e-9)
+        return TransferReport(params, achieved_total, records,
+                              n_samples=sum(r.was_sample for r in records),
+                              total_s=total_s, param_changes=param_changes)
+
+
+def _request_features(env: Environment, dataset: Dataset):
+    import numpy as np
+    return np.array([
+        np.log10(env.link.bandwidth_mbps),
+        np.log10(max(env.link.rtt_s, 1e-5)),
+        np.log10(dataset.avg_file_mb),
+        np.log10(dataset.n_files),
+    ])

@@ -1,0 +1,172 @@
+"""Throughput-surface construction with Gaussian confidence regions
+(Sec. 3.1.1, Eqs. 15-17).
+
+A surface is built per (cluster, load-intensity bin): log entries are
+aggregated onto the observed (p, cc, pp) grid, missing grid nodes are filled
+by inverse-distance weighting from observed entries, and a C2 piecewise-cubic
+spline (``TricubicSurface``) interpolates the grid.  The Gaussian confidence
+region's sigma pools (a) replicate variance at identical parameter points and
+(b) residuals of observations against the fitted surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.maxima import find_local_maxima, integer_argmax, LocalMax
+from repro.core.spline import TricubicSurface, PolySurface
+from repro.netsim.environment import ParamBounds, TransferParams
+from repro.netsim.loggen import LogEntry
+
+# Pseudo-count of neighbourhood evidence for empirical-Bayes node shrinkage;
+# see _aggregate_grid.
+SMOOTH_ALPHA = 4.0
+
+
+@dataclasses.dataclass
+class ThroughputSurface:
+    """One fitted surface + its confidence region + precomputed optima."""
+    surface: TricubicSurface
+    sigma: float                      # Gaussian confidence region (Eq. 17)
+    load_intensity: float             # I_s tag of the bin (Eq. 20)
+    argmax_params: TransferParams     # precomputed offline (Sec. 3.1.2)
+    max_throughput: float
+    local_maxima: list[LocalMax]
+    n_obs: int
+
+    def predict(self, prm: TransferParams) -> float:
+        return float(self.surface(float(prm.p), float(prm.cc), float(prm.pp)))
+
+    def in_confidence(self, prm: TransferParams, observed: float,
+                      z: float = 2.0) -> bool:
+        """Is an observed throughput inside the +-z sigma Gaussian band?"""
+        return abs(observed - self.predict(prm)) <= z * self.sigma
+
+    def above_band(self, prm: TransferParams, observed: float,
+                   z: float = 2.0) -> bool:
+        return observed > self.predict(prm) + z * self.sigma
+
+
+def _knots(vals: np.ndarray, min_count: int) -> np.ndarray:
+    """Grid knots: parameter values with enough observations to trust.
+
+    Users favour popular values (1, 2, 4, 8, 16 ...), so the log is dense on a
+    coarse sub-grid and sparse elsewhere; building spline knots at every
+    stray value lets isolated noisy entries bend the surface.  Entries off
+    the knot grid are snapped to the nearest knot during aggregation.
+    """
+    uniq, cnt = np.unique(vals, return_counts=True)
+    sel = uniq[cnt >= min_count]
+    if len(sel) < 2:
+        sel = uniq
+    return sel
+
+
+def _aggregate_grid(entries: list[LogEntry]
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, float]:
+    """Aggregate entries onto the observed parameter grid.
+
+    Returns (gp, gcc, gpp, grid_mean, grid_count, replicate_sigma).
+    """
+    pts = np.array([[e.p, e.cc, e.pp] for e in entries], np.float64)
+    th = np.array([e.throughput_mbps for e in entries], np.float64)
+    min_count = max(2, len(entries) // 60)
+    gp = _knots(pts[:, 0], min_count)
+    gcc = _knots(pts[:, 1], min_count)
+    gpp = _knots(pts[:, 2], min_count)
+    # snap every entry to its nearest knot along each axis
+    for dim, g in enumerate((gp, gcc, gpp)):
+        i = np.clip(np.searchsorted(g, pts[:, dim]), 0, len(g) - 1)
+        j = np.clip(i - 1, 0, len(g) - 1)
+        pts[:, dim] = np.where(np.abs(g[i] - pts[:, dim])
+                               <= np.abs(pts[:, dim] - g[j]), g[i], g[j])
+    shape = (len(gp), len(gcc), len(gpp))
+    s = np.zeros(shape); s2 = np.zeros(shape); cnt = np.zeros(shape)
+    ip = np.searchsorted(gp, pts[:, 0])
+    ic = np.searchsorted(gcc, pts[:, 1])
+    iq = np.searchsorted(gpp, pts[:, 2])
+    np.add.at(s, (ip, ic, iq), th)
+    np.add.at(s2, (ip, ic, iq), th ** 2)
+    np.add.at(cnt, (ip, ic, iq), 1.0)
+    mean = np.divide(s, cnt, out=np.zeros(shape), where=cnt > 0)
+    # replicate variance at identical parameter entries (omega in Eq. 15)
+    with np.errstate(invalid="ignore"):
+        var = np.divide(s2, cnt, out=np.zeros(shape), where=cnt > 0) - mean ** 2
+    reps = cnt > 1
+    rep_sigma = float(np.sqrt(np.clip(var[reps], 0, None).mean())) if reps.any() else 0.0
+
+    # fill unobserved grid nodes by inverse-distance weighting from samples
+    if (cnt == 0).any():
+        P, C, Q = np.meshgrid(gp, gcc, gpp, indexing="ij")
+        nodes = np.stack([P.ravel(), C.ravel(), Q.ravel()], -1)
+        missing = (cnt == 0).ravel()
+        scale = np.array([max(np.ptp(gp), 1), max(np.ptp(gcc), 1),
+                          max(np.ptp(gpp), 1)])
+        d = np.sqrt((((nodes[missing][:, None] - pts[None]) / scale) ** 2).sum(-1))
+        w = 1.0 / (d + 1e-3) ** 2
+        fill = (w * th[None]).sum(-1) / w.sum(-1)
+        flat = mean.ravel(); flat[missing] = fill
+        mean = flat.reshape(shape)
+
+    # Empirical-Bayes shrinkage toward the local neighbourhood: nodes backed
+    # by few observations inherit strength from their neighbours, so a single
+    # noisy entry cannot mint a spurious surface maximum.
+    pad_m = np.pad(mean, 1, mode="edge")
+    neigh = np.zeros_like(mean)
+    nn = 0
+    for ax in range(3):
+        for s in (-1, 1):
+            sl = [slice(1, -1)] * 3
+            sl[ax] = slice(1 + s, mean.shape[ax] + 1 + s)
+            neigh += pad_m[tuple(sl)]
+            nn += 1
+    neigh /= nn
+    mean = (cnt * mean + SMOOTH_ALPHA * neigh) / (cnt + SMOOTH_ALPHA)
+    return gp, gcc, gpp, mean, cnt, rep_sigma
+
+
+def fit_surface(entries: list[LogEntry], load_intensity: float,
+                bounds: ParamBounds) -> ThroughputSurface:
+    gp, gcc, gpp, grid, cnt, rep_sigma = _aggregate_grid(entries)
+    surf = TricubicSurface.fit(gp, gcc, gpp, grid)
+    # pooled sigma: replicate noise + *robust* residual scale (MAD) of raw
+    # entries against the surface.  A plain RMSE would be inflated by the few
+    # sparse-region misfits and make the confidence band useless for the
+    # online test, so we estimate the Gaussian sigma of Eq. 17 robustly.
+    pts = np.array([[e.p, e.cc, e.pp] for e in entries], np.float64)
+    pred = surf.batch_eval(pts)
+    th = np.array([e.throughput_mbps for e in entries])
+    resid = th - pred
+    mad_sigma = float(1.4826 * np.median(np.abs(resid - np.median(resid))))
+    sigma = float(max(rep_sigma, mad_sigma, 0.02 * max(th.max(), 1.0)))
+    argmax_prm, max_th = integer_argmax(surf, bounds)
+    maxima = find_local_maxima(surf, bounds)
+    return ThroughputSurface(surface=surf, sigma=sigma,
+                             load_intensity=float(load_intensity),
+                             argmax_params=argmax_prm, max_throughput=max_th,
+                             local_maxima=maxima, n_obs=len(entries))
+
+
+# ----------------------------------------------------------------------- #
+# strawman fits for the Fig. 3b comparison
+# ----------------------------------------------------------------------- #
+def fit_poly_surface(entries: list[LogEntry], order: int) -> PolySurface:
+    pts = np.array([[e.p, e.cc, e.pp] for e in entries], np.float64)
+    th = np.array([e.throughput_mbps for e in entries], np.float64)
+    return PolySurface.fit(pts, th, order)
+
+
+def surface_accuracy(model, entries: list[LogEntry]) -> float:
+    """Mean prediction accuracy (%) of a surface model on held-out entries,
+    using the paper's Eq. 25 metric (100 - relative error, floored at 0)."""
+    pts = np.array([[e.p, e.cc, e.pp] for e in entries], np.float64)
+    th = np.array([e.throughput_mbps for e in entries], np.float64)
+    if isinstance(model, ThroughputSurface):
+        pred = model.surface.batch_eval(pts)
+    else:
+        pred = np.asarray(model.batch_eval(pts))
+    pred = np.maximum(pred, 1e-6)
+    acc = 100.0 * (1.0 - np.abs(th - pred) / np.maximum(pred, th))
+    return float(np.clip(acc, 0.0, 100.0).mean())

@@ -1,0 +1,81 @@
+"""Jit-ready dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+On this CPU container the default path is the XLA oracle (``ref.py``); on a
+real TPU ``use_pallas=True`` routes to the Pallas implementations in this
+package.  Pallas kernels are validated against the oracles in interpret mode
+by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+# Above this KV length the XLA path switches from materialized scores to the
+# blocked online-softmax scan (O(S) live memory instead of O(S^2)).
+BLOCKED_ATTENTION_THRESHOLD = 2048
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, use_pallas: bool = False):
+    """GQA SDPA. q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,D)."""
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset)
+    if k.shape[1] > BLOCKED_ATTENTION_THRESHOLD:
+        return ref.attention_blocked(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *,
+                     use_pallas: bool = False):
+    """Single-step attention against a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, L, Hkv, D); valid_mask: (B, L) or (1, L).
+    """
+    # Decode is a memory-bound gather+reduce over the cache; XLA handles it
+    # near-roofline and ring-buffer validity masks are data-dependent, so no
+    # Pallas specialization is used for this path (see DESIGN.md).
+    B, Sq, Hq, D = q.shape
+    _, L, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    f32 = jnp.float32
+    qr = q.reshape(B, Sq, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,blhd->bhgql", qr.astype(f32),
+                        k_cache.astype(f32)) / jnp.sqrt(jnp.asarray(D, f32))
+    mask = valid_mask[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgql,blhd->bqhgd", probs, v_cache.astype(f32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, initial_state=None,
+             return_state: bool = False, use_pallas: bool = False):
+    """Mamba2 SSD over a sequence."""
+    if use_pallas:
+        from repro.kernels.ssm_scan import ssd_pallas
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                          initial_state=initial_state,
+                          return_state=return_state)
+    return ref.ssd_chunked_ref(x, dt, A, B, C, chunk=chunk,
+                               initial_state=initial_state,
+                               return_state=return_state)
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 16, initial_state=None,
+               return_state: bool = False, use_pallas: bool = False):
+    """RWKV6 WKV over a sequence."""
+    if use_pallas:
+        from repro.kernels.rwkv6 import rwkv6_pallas
+        return rwkv6_pallas(r, k, v, w, u, chunk=chunk,
+                            initial_state=initial_state,
+                            return_state=return_state)
+    return ref.rwkv6_chunked_ref(r, k, v, w, u, chunk=chunk,
+                                 initial_state=initial_state,
+                                 return_state=return_state)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (v5e-256) or 2x16x16 two-pod mesh.
+
+    Axes: ``data`` = DP/FSDP, ``model`` = TP/EP; ``pod`` (multi-pod) = pure
+    DP across pods (gradient all-reduce crosses the inter-pod links only on
+    the ``pod`` axis).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_model: int | None = None):
+    """Degenerate mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    n_model = n_model or 1
+    return jax.make_mesh((n // n_model, n_model), ("data", "model"))

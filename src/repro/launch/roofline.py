@@ -1,0 +1,110 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis over the dry-run artifacts.
+
+Three terms per (arch x shape), single-pod 16x16 mesh:
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips * 819 GB/s HBM)
+    collective = collective_bytes / (chips * 50 GB/s ICI per link)
+
+HLO_FLOPs / bytes / collective bytes come from the *cost-mode* dry-run
+(unrolled two-depth extrapolation — XLA's cost_analysis counts lax.scan
+bodies once, see dryrun.run_cost_cell), and are whole-program totals, so the
+per-chip terms divide by the mesh size.  MODEL_FLOPS uses 6*N*D (dense) or
+6*N_active*D (MoE) for training, 2*N*D for single forward/prefill/decode.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline --cost cost_results.json \
+        --mem dryrun_results.json --out roofline.json [--markdown]
+"""
+import argparse
+import json
+
+CHIP_FLOPS = 197e12          # bf16 peak per chip
+HBM_GBPS = 819e9             # bytes/s per chip
+ICI_GBPS = 50e9              # bytes/s per link per chip
+N_CHIPS = 256                # single-pod roofline
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+    cfg = get_config(arch, "full")
+    shape = SHAPES[shape_name]
+    n_active = cfg.n_active_params_est
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(cost_row: dict) -> dict:
+    # cost_analysis() of the SPMD-partitioned module reports the PER-DEVICE
+    # program (verified: llama3-405b train_4k HLO flops x 256 = 1.3x the
+    # analytic 6*N*D — the 1.3 is remat recompute).  The collective bytes
+    # parsed from the partitioned HLO are per-device wire bytes likewise.
+    # clamp: the two-depth extrapolation can go (slightly) negative on tiny
+    # programs where per-depth noise exceeds the slope (rwkv decode)
+    f = max(cost_row["flops_total"], 0.0)          # per-device
+    b = max(cost_row["bytes_accessed"], 0.0)       # per-device
+    c = max(cost_row["collective_bytes_total"], 0.0)
+    t_compute = f / CHIP_FLOPS
+    t_memory = b / HBM_GBPS
+    t_coll = c / ICI_GBPS
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    mf = model_flops(cost_row["arch"], cost_row["shape"]) / N_CHIPS
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": cost_row["arch"], "shape": cost_row["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": mf, "hlo_flops_per_dev": f,
+        "useful_ratio": mf / max(f, 1.0),
+        # fraction of the peak-compute roofline actually claimed: the step
+        # can't run faster than its dominant term, so usable MFU is bounded by
+        "roofline_mfu_bound": (mf / CHIP_FLOPS) / max(bound, 1e-12),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cost", default="cost_results.json")
+    ap.add_argument("--mem", default="dryrun_results.json")
+    ap.add_argument("--out", default="roofline.json")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    cost = [r for r in json.load(open(args.cost)) if "error" not in r]
+    mem = {(r["arch"], r["shape"]): r for r in json.load(open(args.mem))
+           if "error" not in r and r["mesh"] == "16x16"}
+    rows = []
+    for r in cost:
+        t = roofline_terms(r)
+        m = mem.get((r["arch"], r["shape"]))
+        if m:
+            t["peak_gib_per_device"] = (m["bytes_per_device"]["argument"]
+                                        + m["bytes_per_device"]["temp"]) / 2**30
+        rows.append(t)
+    json.dump(rows, open(args.out, "w"), indent=1)
+
+    if args.markdown:
+        print("| arch | shape | compute s | memory s | collective s | "
+              "dominant | MODEL/HLO | MFU bound | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for t in sorted(rows, key=lambda t: (t["arch"], t["shape"])):
+            print(f"| {t['arch']} | {t['shape']} | {t['t_compute_s']:.2e} | "
+                  f"{t['t_memory_s']:.2e} | {t['t_collective_s']:.2e} | "
+                  f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+                  f"{t['roofline_mfu_bound']:.2f} | "
+                  f"{t.get('peak_gib_per_device', float('nan')):.1f} |")
+
+
+if __name__ == "__main__":
+    main()

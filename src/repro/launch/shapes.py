@@ -1,0 +1,78 @@
+"""Assigned input-shape sets and abstract input specs per (arch, shape).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a KV/state
+cache); ``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers the
+cache-filling prefill.  ``long_500k`` requires sub-quadratic attention and
+only applies to SSM / hybrid / sliding-window archs (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str             # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs with sub-quadratic attention paths; everything else skips long_500k
+LONG_CONTEXT_OK = {"zamba2-7b", "rwkv6-1.6b", "mixtral-8x22b"}
+
+# per-arch gradient-accumulation microbatches for the train_4k lowering
+TRAIN_MICROBATCHES = {
+    "llama3-405b": 8,
+    "deepseek-v3-671b": 8,
+    "mixtral-8x22b": 4,
+    "qwen2.5-32b": 4,
+    "internlm2-20b": 4,
+    "zamba2-7b": 2,
+    "default": 2,
+}
+
+
+def applicable_cells() -> list[tuple[str, str]]:
+    from repro.configs import all_archs
+    cells = []
+    for arch in all_archs():
+        for sname in SHAPES:
+            if sname == "long_500k" and arch not in LONG_CONTEXT_OK:
+                continue
+            cells.append((arch, sname))
+    # zamba2's heterogeneous stack unrolls in prefill/decode and compiles
+    # slowest — schedule it last so the sweep lands the easy cells first
+    cells.sort(key=lambda c: (c[0] == "zamba2-7b", c[1] != "train_4k"))
+    return cells
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+        specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(tok_shape, i32)
+        if cfg.vision_stub:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), cfg.dtype)
+        return specs
+    # decode: one new token; the cache spec comes from Model.init_cache
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    return {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}

@@ -1,0 +1,93 @@
+"""Production training launcher.
+
+On a real TPU fleet this runs under multi-host jax.distributed; on this CPU
+container it drives reduced configs end-to-end (the full configs are
+exercised by launch/dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+        --variant smoke --steps 100 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--tune-ckpt", action="store_true",
+                    help="tune (cc,p,pp) for checkpoint saves from live logs")
+    args = ap.parse_args()
+
+    from repro.checkpoint.ckpt import CkptParams, latest_step, \
+        restore_checkpoint, save_checkpoint
+    from repro.checkpoint.tuning import CheckpointTuner
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, PipelineParams, TokenPipeline
+    from repro.models.model import build_model
+    from repro.models.params import paths_from_tree, tree_from_paths
+    from repro.train.loop import TrainConfig, Trainer
+    from repro.train.straggler import StragglerDetector
+
+    cfg = get_config(args.arch, args.variant)
+    model = build_model(cfg)
+    tcfg = TrainConfig(microbatches=args.microbatches,
+                       total_steps=args.steps)
+    trainer = Trainer(model, tcfg, jax.random.PRNGKey(0))
+
+    ckpt_dir = args.ckpt_dir or f"/tmp/repro_ckpt_{cfg.name}"
+    log_path = os.path.join(ckpt_dir, "transfers.jsonl")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    start = latest_step(ckpt_dir) or 0
+    if start:
+        host = restore_checkpoint(ckpt_dir)
+        cur = paths_from_tree(trainer.params)
+        trainer.params = tree_from_paths({
+            k: jax.numpy.asarray(v, cur[k].dtype)
+            for k, v in paths_from_tree(host).items() if k in cur})
+        print(f"resumed from step {start}")
+
+    pipe = TokenPipeline(
+        DataConfig(cfg.vocab_size, args.global_batch, args.seq,
+                   n_codebooks=cfg.n_codebooks, seed=start),
+        PipelineParams(cc=2, p=2, pp=3))
+    detector = StragglerDetector(n_hosts=1)
+    ckpt_params = CkptParams()
+
+    def on_step(step, m):
+        detector.record(np.array([m["step_time_s"]]))
+        if step % 10 == 0:
+            print(f"step {start + step} loss={m['loss']:.4f} "
+                  f"{m['step_time_s'] * 1e3:.0f}ms")
+        if (step + 1) % args.ckpt_every == 0:
+            nonlocal ckpt_params
+            stats = save_checkpoint(ckpt_dir, start + step + 1,
+                                    trainer.params, params=ckpt_params,
+                                    log_path=log_path)
+            print(f"ckpt @{start + step + 1}: "
+                  f"{stats['throughput_mbps']:.0f} Mbps "
+                  f"(cc={ckpt_params.cc},p={ckpt_params.p},pp={ckpt_params.pp})")
+            if args.tune_ckpt and os.path.exists(log_path) and \
+                    sum(1 for _ in open(log_path)) >= 8:
+                ckpt_params = CheckpointTuner(log_path).fit().recommend()
+
+    trainer.run((pipe.next_batch() for _ in range(args.steps)),
+                on_step=on_step)
+    pipe.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

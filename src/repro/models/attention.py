@@ -1,0 +1,243 @@
+"""Attention blocks: GQA (optional sliding window / M-RoPE) and MLA
+(DeepSeek-V3 multi-head latent attention), with prefill and decode paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope
+from repro.models.params import InitCtx
+
+
+# --------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------- #
+def gqa_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": ctx.param(f"{prefix}.wq", (d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ctx.param(f"{prefix}.wk", (d, Hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ctx.param(f"{prefix}.wv", (d, Hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ctx.param(f"{prefix}.wo", (H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ctx.param(f"{prefix}.bq", (H, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = ctx.param(f"{prefix}.bk", (Hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = ctx.param(f"{prefix}.bv", (Hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, positions):
+    """Full-sequence causal attention (training / prefill w/o cache)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = kops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                             use_pallas=cfg.use_pallas)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, positions, cache):
+    """Prefill: run full attention AND fill the cache.
+
+    Sliding-window caches are rings of size ``window``: only the trailing
+    window of keys survives prefill (memory stays O(window), the whole point
+    of SWA for long prompts)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    L = cache["k"].shape[1]
+    if S > L:                       # SWA ring: keep the last L positions
+        # place tokens at their ring slots so decode continues seamlessly
+        roll = S % L
+        k_tail = jnp.roll(k[:, -L:], shift=roll, axis=1)
+        v_tail = jnp.roll(v[:, -L:], shift=roll, axis=1)
+        k_w, v_w = k_tail, v_tail
+    else:
+        k_w, v_w = k, v
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k_w.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v_w.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        "len": jnp.full_like(cache["len"], S),
+    }
+    o = kops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                             use_pallas=cfg.use_pallas)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+def gqa_decode(p, x, cfg: ModelConfig, positions, cache):
+    """Single-token decode against a KV cache.
+
+    For sliding-window attention the cache is a ring buffer of size
+    ``cfg.sliding_window`` — memory O(window), not O(seq).
+    """
+    q, k, v = _project_qkv(p, x, cfg, positions)      # (B, 1, H, hd)
+    L = cache["k"].shape[1]
+    pos = cache["len"][0]                             # scalar current length
+    slot = pos % L if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    n_valid = jnp.minimum(pos + 1, L)
+    # mask invalid (not-yet-written) slots; ring buffers are position-safe
+    # because decay ordering does not matter for the softmax row.
+    kpos = jnp.arange(L)
+    valid = kpos[None, :] < n_valid
+    o = kops.decode_attention(q, ck, cv, valid, use_pallas=cfg.use_pallas)
+    cache = {"k": ck, "v": cv, "len": cache["len"] + 1}
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+def gqa_cache_init(cfg: ModelConfig, ctx: InitCtx, prefix: str, batch: int,
+                   max_len: int) -> dict:
+    L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": ctx.param(f"{prefix}.k", (batch, L, cfg.n_kv_heads, cfg.head_dim),
+                       ("batch", "seq_cache", "kv_heads", "head_dim"), init="zeros"),
+        "v": ctx.param(f"{prefix}.v", (batch, L, cfg.n_kv_heads, cfg.head_dim),
+                       ("batch", "seq_cache", "kv_heads", "head_dim"), init="zeros"),
+        "len": ctx.param(f"{prefix}.len", (1,), (None,), init="zeros",
+                         dtype=jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------- #
+# MLA (DeepSeek-V3): latent-compressed KV + decoupled RoPE
+# --------------------------------------------------------------------- #
+def mla_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": ctx.param(f"{prefix}.wq_a", (d, qr), ("embed", "q_lora")),
+        "wq_b": ctx.param(f"{prefix}.wq_b", (qr, H, dn + dr),
+                          ("q_lora", "heads", "head_dim")),
+        "wkv_a": ctx.param(f"{prefix}.wkv_a", (d, kvr + dr), ("embed", "kv_lora")),
+        "wkv_b": ctx.param(f"{prefix}.wkv_b", (kvr, H, dn + dv),
+                           ("kv_lora", "heads", "head_dim")),
+        "wo": ctx.param(f"{prefix}.wo", (H, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dr,rhk->bshk", x, p["wq_a"], p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv_a[..., :kvr], kv_a[..., kvr:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_rope_b = jnp.broadcast_to(k_rope, q_rope.shape[:2] + (cfg.n_heads, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return q_full, k_full, v
+
+
+def mla_forward(p, x, cfg: ModelConfig, positions):
+    q, k, v = _mla_qkv(p, x, cfg, positions)
+    # pad v to qk head_dim for the shared attention primitive, then strip
+    dqk, dv = q.shape[-1], v.shape[-1]
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+    o = kops.flash_attention(q, k, vpad, causal=True,
+                             use_pallas=cfg.use_pallas)[..., :dv]
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _mla_latents(p, x, cfg: ModelConfig, positions):
+    """Compressed KV latent c_kv (B,S,kvr) and decoupled RoPE key (B,S,dr)."""
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv_a[..., :kvr], kv_a[..., kvr:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_prefill(p, x, cfg: ModelConfig, positions, cache):
+    """Prefill computes full attention and stores only the LATENT cache —
+    this is MLA's contribution (KV bytes ~ kv_lora_rank, not heads*dim)."""
+    q, k, v = _mla_qkv(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latents(p, x, cfg, positions)
+    S = x.shape[1]
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0)),
+        "krope": jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0)),
+        "len": jnp.full_like(cache["len"], S),
+    }
+    dqk, dv = q.shape[-1], v.shape[-1]
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+    o = kops.flash_attention(q, k, vpad, causal=True,
+                             use_pallas=cfg.use_pallas)[..., :dv]
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+def mla_decode(p, x, cfg: ModelConfig, positions, cache):
+    """Absorbed-matrices MLA decode: queries are projected into the latent
+    space, attention runs against the latent cache directly, and the value
+    up-projection is applied to the attended latent."""
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dr,rhk->bshk", x, p["wq_a"], p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _mla_latents(p, x, cfg, positions)   # (B,1,kvr),(B,1,dr)
+
+    L = cache["ckv"].shape[1]
+    pos = cache["len"][0]
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
+
+    wb_k = p["wkv_b"][..., :dn]                         # (kvr, H, dn)
+    wb_v = p["wkv_b"][..., dn:]                         # (kvr, H, dv)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wb_k)  # absorbed query
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, f32))
+    scores = (jnp.einsum("bshr,blr->bhsl", q_lat.astype(f32), ckv.astype(f32))
+              + jnp.einsum("bshk,blk->bhsl", q_rope.astype(f32),
+                           krope.astype(f32))) * scale
+    valid = jnp.arange(L)[None, None, None, :] < (pos + 1)
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhsl,blr->bshr", probs, ckv.astype(f32))
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, wb_v.astype(f32)).astype(x.dtype)
+    cache = {"ckv": ckv, "krope": krope, "len": cache["len"] + 1}
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache
+
+
+def mla_cache_init(cfg: ModelConfig, ctx: InitCtx, prefix: str, batch: int,
+                   max_len: int) -> dict:
+    return {
+        "ckv": ctx.param(f"{prefix}.ckv", (batch, max_len, cfg.kv_lora_rank),
+                         ("batch", "seq_cache", "kv_lora"), init="zeros"),
+        "krope": ctx.param(f"{prefix}.krope",
+                           (batch, max_len, cfg.qk_rope_head_dim),
+                           ("batch", "seq_cache", None), init="zeros"),
+        "len": ctx.param(f"{prefix}.len", (1,), (None,), init="zeros",
+                         dtype=jnp.int32),
+    }

@@ -1,0 +1,60 @@
+"""Shared neural building blocks: RMSNorm, RoPE / M-RoPE, SwiGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) absolute positions."""
+    D = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(D, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv        # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, int, int]):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, B, S) temporal/height/width position ids.  The head_dim/2
+    frequency slots are partitioned into ``sections`` (t, h, w); each section
+    rotates by its own position stream.  Text tokens carry identical t/h/w
+    ids, reducing to standard RoPE.
+    """
+    D = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(D, theta), jnp.float32)        # (D/2,)
+    assert sum(sections) == D // 2, (sections, D)
+    sec_id = jnp.asarray(np.repeat(np.arange(3), sections))     # (D/2,)
+    pos = positions3.astype(jnp.float32)                        # (3, B, S)
+    ang = pos[..., None] * inv                                  # (3, B, S, D/2)
+    ang = jnp.take_along_axis(
+        ang, sec_id[None, None, None, :].astype(jnp.int32),
+        axis=0)[0]                                              # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)

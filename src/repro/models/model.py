@@ -1,0 +1,579 @@
+"""Model assembly: layer stacks (scanned + remat), embeddings, heads, and the
+three lowering entry points (forward / prefill / decode) for every family.
+
+Layer parameters are stacked along a leading "layers" axis and the stack body
+runs under ``jax.lax.scan`` (with optional ``jax.checkpoint``), keeping the
+HLO compact enough to compile 126-layer models for 512 devices quickly.
+Heterogeneous stacks (DeepSeek first-k-dense, Zamba2 shared attention block)
+scan the homogeneous majority and handle the exceptions outside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import InitCtx
+
+
+def _constrain(x, cfg: ModelConfig):
+    """Pin the residual stream's sharding at layer boundaries (requires an
+    ambient mesh, i.e. lowering inside ``with mesh:``)."""
+    if cfg.act_spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.act_spec))
+
+
+# ===================================================================== #
+# per-layer init / apply for each family
+# ===================================================================== #
+def _dense_layer_init(cfg: ModelConfig, ctx: InitCtx, prefix: str,
+                      use_moe: bool) -> dict:
+    p = {
+        "ln1": ctx.param(f"{prefix}.ln1", (cfg.d_model,), ("embed",),
+                         init="ones"),
+        "ln2": ctx.param(f"{prefix}.ln2", (cfg.d_model,), ("embed",),
+                         init="ones"),
+    }
+    if cfg.attn_type == "mla":
+        p["attn"] = attn.mla_init(cfg, ctx, f"{prefix}.attn")
+    else:
+        p["attn"] = attn.gqa_init(cfg, ctx, f"{prefix}.attn")
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(cfg, ctx, f"{prefix}.moe")
+    else:
+        p["ffn"] = moe_mod.ffn_init(cfg, ctx, f"{prefix}.ffn")
+    return p
+
+
+def _dense_layer_fwd(p, x, cfg: ModelConfig, positions, mode: str,
+                     cache=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        fwd = {"train": attn.mla_forward, "prefill": attn.mla_prefill,
+               "decode": attn.mla_decode}
+    else:
+        fwd = {"train": attn.gqa_forward, "prefill": attn.gqa_prefill,
+               "decode": attn.gqa_decode}
+    if mode == "train":
+        a = fwd["train"](p["attn"], h, cfg, positions)
+        new_cache = None
+    else:
+        a, new_cache = fwd[mode](p["attn"], h, cfg, positions, cache)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        f, aux = moe_mod.moe_forward(p["moe"], h, cfg)
+    else:
+        f = moe_mod.ffn_forward(p["ffn"], h)
+    return x + f, new_cache, aux
+
+
+def _mamba_layer_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    return {
+        "ln": ctx.param(f"{prefix}.ln", (cfg.d_model,), ("embed",),
+                        init="ones"),
+        "mixer": ssm_mod.mamba2_init(cfg, ctx, f"{prefix}.mixer"),
+    }
+
+
+def _rwkv_layer_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    return {
+        "ln1": ctx.param(f"{prefix}.ln1", (cfg.d_model,), ("embed",),
+                         init="ones"),
+        "ln2": ctx.param(f"{prefix}.ln2", (cfg.d_model,), ("embed",),
+                         init="ones"),
+        "time": rwkv_mod.rwkv6_init(cfg, ctx, f"{prefix}.time"),
+    }
+
+
+# ===================================================================== #
+# Model
+# ===================================================================== #
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------ init ------------------------------ #
+    def init(self, key, abstract: bool = False):
+        """Returns (params, logical_axes) — axes keyed by param path."""
+        cfg = self.cfg
+        ctx = InitCtx(key=None if abstract else key, dtype=cfg.dtype,
+                      abstract=abstract)
+
+        params: dict[str, Any] = {
+            "embed": ctx.param("embed", (cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), scale=0.02),
+            "ln_f": ctx.param("ln_f", (cfg.d_model,), ("embed",), init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = ctx.param("head", (cfg.d_model, cfg.vocab_size),
+                                       ("embed", "vocab"), scale=0.02)
+        if cfg.n_codebooks:
+            params["embed_cb"] = ctx.param(
+                "embed_cb", (cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+                (None, "vocab", "embed"), scale=0.02)
+            params["head_cb"] = ctx.param(
+                "head_cb", (cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+                (None, "embed", "vocab"), scale=0.02)
+
+        # ---- layer stacks (stacked along a leading "layers" axis) ----- #
+        def stacked(n: int, init_one: Callable[[InitCtx, str], dict],
+                    tag: str, tree_key: str):
+            tag_h = zlib.crc32(tag.encode()) % (2 ** 31)   # deterministic
+            sub = InitCtx(key=None if abstract else
+                          jax.random.fold_in(key, tag_h),
+                          dtype=cfg.dtype, abstract=True)
+            proto = init_one(sub, tag)          # abstract prototype for axes
+            stack_ctx = InitCtx(key=None if abstract else
+                                jax.random.fold_in(key, tag_h + 1),
+                                dtype=cfg.dtype, abstract=abstract)
+
+            def stack_leaf(path, leaf):
+                axes = ("layers",) + sub.axes[f"{tag}.{path}"]
+                return stack_ctx.param(
+                    f"{tree_key}.{path}", (n,) + leaf.shape, axes,
+                    init=_leaf_init(path), dtype=leaf.dtype)
+
+            from repro.models.params import paths_from_tree, tree_from_paths
+            flat = paths_from_tree(proto)
+            out = {pth: stack_leaf(pth, leaf) for pth, leaf in flat.items()}
+            ctx.axes.update(stack_ctx.axes)
+            return tree_from_paths(out)
+
+        fam = cfg.family
+        if cfg.rwkv:
+            params["layers"] = stacked(
+                cfg.n_layers, lambda c, t: _rwkv_layer_init(cfg, c, t),
+                "rwkv", "layers")
+        elif fam in ("ssm", "hybrid"):
+            params["layers"] = stacked(
+                cfg.n_layers, lambda c, t: _mamba_layer_init(cfg, c, t),
+                "mamba", "layers")
+            if cfg.hybrid_attn_every:
+                params["shared_attn"] = _dense_layer_init(
+                    cfg, ctx, "shared_attn", use_moe=False)
+        else:
+            use_moe = cfg.n_experts > 0
+            n_moe = cfg.n_layers - cfg.first_k_dense
+            if use_moe and cfg.first_k_dense:
+                params["dense_layers"] = stacked(
+                    cfg.first_k_dense,
+                    lambda c, t: _dense_layer_init(cfg, c, t, False),
+                    "dense", "dense_layers")
+                params["layers"] = stacked(
+                    n_moe, lambda c, t: _dense_layer_init(cfg, c, t, True),
+                    "moe", "layers")
+            else:
+                params["layers"] = stacked(
+                    cfg.n_layers,
+                    lambda c, t: _dense_layer_init(cfg, c, t, use_moe),
+                    "layer", "layers")
+        return params, dict(ctx.axes)
+
+    # --------------------------- embedding ---------------------------- #
+    def embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            # tokens: (B, S, n_codebooks) EnCodec streams, embeddings summed
+            x = sum(params["embed_cb"][c][tokens[..., c]]
+                    for c in range(cfg.n_codebooks))
+        else:
+            x = params["embed"][tokens]
+        if cfg.vision_stub and patch_embeds is not None:
+            # vision stub: precomputed patch embeddings replace the first
+            # n_patches positions (the modality frontend is out of scope)
+            n = patch_embeds.shape[1]
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, n:]],
+                                axis=1)
+        return x
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.n_codebooks:
+            return jnp.einsum("bsd,cdv->bscv", x, params["head_cb"])
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return jnp.einsum("bsd,dv->bsv", x, head)
+
+    # ------------------------- stack runners --------------------------- #
+    def _positions(self, tokens, offset=0):
+        cfg = self.cfg
+        B, S = tokens.shape[0], tokens.shape[1]
+        pos = jnp.arange(S)[None, :] + offset
+        pos = jnp.broadcast_to(pos, (B, S))
+        if cfg.mrope:
+            return jnp.broadcast_to(pos[None], (3, B, S))   # text-like ids
+        return pos
+
+    def _scan_stack(self, layer_fn, stack_params, x, *extra):
+        """Run scanned layers with optional remat.  layer_fn: (x, p) -> x, aux."""
+        cfg = self.cfg
+        body = layer_fn
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def step(carry, lp):
+            y, aux = body(carry, lp)
+            return _constrain(y, cfg), aux
+
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(step, x, stack_params)
+            return x, jnp.sum(auxs)
+        n = jax.tree.leaves(stack_params)[0].shape[0]
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stack_params)
+            x, aux = step(x, lp)
+            total += aux
+        return x, total
+
+    # ----------------------------- forward ----------------------------- #
+    def forward(self, params, tokens, patch_embeds=None):
+        """Training forward: tokens -> logits (+ aux losses)."""
+        cfg = self.cfg
+        x = _constrain(self.embed(params, tokens, patch_embeds), cfg)
+        positions = self._positions(tokens)
+
+        if cfg.rwkv:
+            def layer(x, lp):
+                h = rwkv_mod.rwkv6_time_mix(
+                    lp["time"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg)
+                x = x + h
+                h = rwkv_mod.rwkv6_channel_mix(
+                    lp["time"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+                return x + h, jnp.zeros((), jnp.float32)
+            x, aux = self._scan_stack(layer, params["layers"], x)
+
+        elif cfg.family in ("ssm", "hybrid"):
+            k_every = cfg.hybrid_attn_every
+
+            def layer(carry, lp_i):
+                x, idx = carry
+                lp = lp_i
+                h = ssm_mod.mamba2_forward(
+                    lp["mixer"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg)
+                x = x + h
+                if k_every:
+                    def shared(x):
+                        y, _, _ = _dense_layer_fwd(
+                            params["shared_attn"], x, cfg, positions, "train")
+                        return y
+                    x = jax.lax.cond(
+                        (idx + 1) % k_every == 0, shared, lambda x: x, x)
+                return (_constrain(x, cfg), idx + 1), jnp.zeros((), jnp.float32)
+
+            body = layer
+            if cfg.remat:
+                body = jax.checkpoint(
+                    layer, policy=jax.checkpoint_policies.nothing_saveable)
+            if cfg.scan_layers:
+                (x, _), auxs = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)),
+                                            params["layers"])
+                aux = jnp.sum(auxs)
+            else:
+                carry = (x, jnp.zeros((), jnp.int32))
+                aux = jnp.zeros((), jnp.float32)
+                n = jax.tree.leaves(params["layers"])[0].shape[0]
+                for i in range(n):
+                    lp = jax.tree.map(lambda a: a[i], params["layers"])
+                    carry, a = body(carry, lp)
+                    aux += a
+                x = carry[0]
+
+        else:
+            def layer(x, lp):
+                y, _, aux = _dense_layer_fwd(lp, x, cfg, positions, "train")
+                return y, aux
+            aux = jnp.zeros((), jnp.float32)
+            if "dense_layers" in params:
+                x, a0 = self._scan_stack(layer, params["dense_layers"], x)
+                aux += a0
+            x, a1 = self._scan_stack(layer, params["layers"], x)
+            aux += a1
+
+        return self.logits(params, x), aux
+
+    # ------------------------------ cache ------------------------------ #
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        """Per-layer decoding state, stacked along the layers axis."""
+        cfg = self.cfg
+        ctx = InitCtx(key=None, dtype=cfg.dtype, abstract=True)
+
+        def one(prefix):
+            if cfg.rwkv:
+                return rwkv_mod.rwkv6_state_init(cfg, ctx, prefix, batch)
+            if cfg.family in ("ssm", "hybrid"):
+                return ssm_mod.mamba2_state_init(cfg, ctx, prefix, batch)
+            if cfg.attn_type == "mla":
+                return attn.mla_cache_init(cfg, ctx, prefix, batch, max_len)
+            return attn.gqa_cache_init(cfg, ctx, prefix, batch, max_len)
+
+        proto = one("cache")
+        from repro.models.params import paths_from_tree, tree_from_paths
+        flat = paths_from_tree(proto)
+        out_ctx = InitCtx(key=None, dtype=cfg.dtype, abstract=abstract)
+        n_scanned = (cfg.n_layers - cfg.first_k_dense
+                     if (cfg.n_experts and cfg.first_k_dense) else cfg.n_layers)
+        stack = {pth: out_ctx.param(f"layers.{pth}",
+                                    (n_scanned,) + leaf.shape,
+                                    ("layers",) + ctx.axes[f"cache.{pth}"],
+                                    init="zeros", dtype=leaf.dtype)
+                 for pth, leaf in flat.items()}
+        cache = {"layers": tree_from_paths(stack)}
+        if cfg.n_experts and cfg.first_k_dense:
+            dstack = {pth: out_ctx.param(
+                f"dense_layers.{pth}", (cfg.first_k_dense,) + leaf.shape,
+                ("layers",) + ctx.axes[f"cache.{pth}"], init="zeros",
+                dtype=leaf.dtype) for pth, leaf in flat.items()}
+            cache["dense_layers"] = tree_from_paths(dstack)
+        if cfg.hybrid_attn_every:
+            actx = InitCtx(key=None, dtype=cfg.dtype, abstract=abstract)
+            n_attn = cfg.n_layers // cfg.hybrid_attn_every
+            a_proto_ctx = InitCtx(key=None, dtype=cfg.dtype, abstract=True)
+            a_proto = attn.gqa_cache_init(cfg, a_proto_ctx, "acache", batch,
+                                          max_len)
+            aflat = paths_from_tree(a_proto)
+            astack = {pth: actx.param(
+                f"shared_attn.{pth}", (n_attn,) + leaf.shape,
+                ("layers",) + a_proto_ctx.axes[f"acache.{pth}"],
+                init="zeros", dtype=leaf.dtype) for pth, leaf in aflat.items()}
+            cache["shared_attn"] = tree_from_paths(astack)
+            out_ctx.axes.update(actx.axes)
+        axes = dict(out_ctx.axes)
+        return cache, axes
+
+    def _cache_stack(self, layer, x, stack_params, stack_cache):
+        """Scan (or unroll, per cfg.scan_layers) layers threading a stacked
+        per-layer cache.  layer: (x, (lp, lc)) -> (x, new_cache)."""
+        if self.cfg.scan_layers:
+            return jax.lax.scan(layer, x, (stack_params, stack_cache))
+        n = jax.tree.leaves(stack_params)[0].shape[0]
+        outs = []
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stack_params)
+            lc = jax.tree.map(lambda a: a[i], stack_cache)
+            x, nc = layer(x, (lp, lc))
+            outs.append(nc)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, stacked
+
+    # ----------------------------- prefill ----------------------------- #
+    def prefill(self, params, tokens, cache, patch_embeds=None):
+        """Full-sequence forward that also fills the decode cache."""
+        cfg = self.cfg
+        x = _constrain(self.embed(params, tokens, patch_embeds), cfg)
+        positions = self._positions(tokens)
+
+        if cfg.rwkv:
+            def layer(x, lp_cache):
+                lp, _ = lp_cache
+                h, wkv, sh_t = rwkv_mod.rwkv6_time_mix(
+                    lp["time"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                    return_state=True)
+                x = x + h
+                h, sh_c = rwkv_mod.rwkv6_channel_mix(
+                    lp["time"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg,
+                    return_state=True)
+                new_cache = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+                return x + h, new_cache
+
+            x, new_caches = self._cache_stack(layer, x, params["layers"],
+                                              cache["layers"])
+            return self.logits(params, x[:, -1:]), {"layers": new_caches}
+
+        if cfg.family in ("ssm", "hybrid"):
+            k_every = cfg.hybrid_attn_every
+            shared_caches = []
+            # scan mamba layers; shared attention handled per group
+            if k_every:
+                # unrolled by groups to interleave the shared block
+                n = cfg.n_layers
+                new_layer_cache = []
+                attn_idx = 0
+                new_attn_cache = cache.get("shared_attn")
+                for i in range(n):
+                    lp = jax.tree.map(lambda a: a[i], params["layers"])
+                    lc = jax.tree.map(lambda a: a[i], cache["layers"])
+                    h, ssm_state, conv_state = ssm_mod.mamba2_forward(
+                        lp["mixer"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg,
+                        return_state=True)
+                    x = x + h
+                    new_layer_cache.append({"ssm": ssm_state,
+                                            "conv": conv_state})
+                    if (i + 1) % k_every == 0:
+                        ac = jax.tree.map(lambda a: a[attn_idx],
+                                          cache["shared_attn"])
+                        y, nac, _ = _dense_layer_fwd(
+                            params["shared_attn"], x, cfg, positions,
+                            "prefill", ac)
+                        x = y
+                        new_attn_cache = jax.tree.map(
+                            lambda full, new, j=attn_idx:
+                            full.at[j].set(new), new_attn_cache, nac)
+                        attn_idx += 1
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *new_layer_cache)
+                return self.logits(params, x[:, -1:]), {
+                    "layers": stacked, "shared_attn": new_attn_cache}
+
+            def layer(x, lp_cache):
+                lp, _ = lp_cache
+                h, ssm_state, conv_state = ssm_mod.mamba2_forward(
+                    lp["mixer"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg,
+                    return_state=True)
+                return x + h, {"ssm": ssm_state, "conv": conv_state}
+            x, new_caches = self._cache_stack(layer, x, params["layers"],
+                                              cache["layers"])
+            return self.logits(params, x[:, -1:]), {"layers": new_caches}
+
+        # dense / moe
+        def layer(x, lp_cache):
+            lp, lc = lp_cache
+            y, nc, _ = _dense_layer_fwd(lp, x, cfg, positions, "prefill", lc)
+            return y, nc
+        new_cache = {}
+        if "dense_layers" in params:
+            x, nc0 = self._cache_stack(layer, x, params["dense_layers"],
+                                       cache["dense_layers"])
+            new_cache["dense_layers"] = nc0
+        x, nc1 = self._cache_stack(layer, x, params["layers"],
+                                   cache["layers"])
+        new_cache["layers"] = nc1
+        return self.logits(params, x[:, -1:]), new_cache
+
+    # ------------------------------ decode ----------------------------- #
+    def decode(self, params, tokens, cache):
+        """Single-token decode step.  tokens: (B, 1) (or (B, 1, CB))."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        if cfg.rwkv:
+            def layer(x, lp_cache):
+                lp, lc = lp_cache
+                h, wkv, sh_t = rwkv_mod.rwkv6_time_mix(
+                    lp["time"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                    shift_state=lc["shift_t"], wkv_state=lc["wkv"],
+                    return_state=True)
+                x = x + h
+                h, sh_c = rwkv_mod.rwkv6_channel_mix(
+                    lp["time"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg,
+                    shift_state=lc["shift_c"], return_state=True)
+                return x + h, {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+            x, new_caches = self._cache_stack(layer, x, params["layers"],
+                                              cache["layers"])
+            return self.logits(params, x), {"layers": new_caches}
+
+        if cfg.family in ("ssm", "hybrid"):
+            k_every = cfg.hybrid_attn_every
+            if k_every:
+                pos_scalar = cache["shared_attn"]["len"][0, 0]
+                positions = jnp.broadcast_to(pos_scalar[None, None],
+                                             (x.shape[0], 1))
+                n = cfg.n_layers
+                new_layer_cache = []
+                attn_idx = 0
+                new_attn_cache = cache["shared_attn"]
+                for i in range(n):
+                    lp = jax.tree.map(lambda a: a[i], params["layers"])
+                    lc = jax.tree.map(lambda a: a[i], cache["layers"])
+                    h, ssm_state, conv_state = ssm_mod.mamba2_decode(
+                        lp["mixer"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg,
+                        lc["ssm"], lc["conv"])
+                    x = x + h
+                    new_layer_cache.append({"ssm": ssm_state,
+                                            "conv": conv_state})
+                    if (i + 1) % k_every == 0:
+                        ac = jax.tree.map(lambda a: a[attn_idx],
+                                          cache["shared_attn"])
+                        y, nac, _ = _dense_layer_fwd(
+                            params["shared_attn"], x, cfg, positions,
+                            "decode", ac)
+                        x = y
+                        new_attn_cache = jax.tree.map(
+                            lambda full, new, j=attn_idx:
+                            full.at[j].set(new), new_attn_cache, nac)
+                        attn_idx += 1
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *new_layer_cache)
+                return self.logits(params, x), {
+                    "layers": stacked, "shared_attn": new_attn_cache}
+
+            def layer(x, lp_cache):
+                lp, lc = lp_cache
+                h, ssm_state, conv_state = ssm_mod.mamba2_decode(
+                    lp["mixer"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg,
+                    lc["ssm"], lc["conv"])
+                return x + h, {"ssm": ssm_state, "conv": conv_state}
+            x, new_caches = self._cache_stack(layer, x, params["layers"],
+                                              cache["layers"])
+            return self.logits(params, x), {"layers": new_caches}
+
+        # dense / moe: positions from the cache length counter
+        first = cache.get("dense_layers", cache["layers"])
+        pos_scalar = first["len"][0, 0]
+        tok2d = tokens if tokens.ndim == 2 else tokens[..., 0]
+        positions = jnp.broadcast_to(pos_scalar[None, None],
+                                     (tok2d.shape[0], 1))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None],
+                                         (3,) + positions.shape)
+
+        def layer(x, lp_cache):
+            lp, lc = lp_cache
+            y, nc, _ = _dense_layer_fwd(lp, x, cfg, positions, "decode", lc)
+            return y, nc
+        new_cache = {}
+        if "dense_layers" in params:
+            x, nc0 = self._cache_stack(layer, x, params["dense_layers"],
+                                       cache["dense_layers"])
+            new_cache["dense_layers"] = nc0
+        x, nc1 = self._cache_stack(layer, x, params["layers"],
+                                   cache["layers"])
+        new_cache["layers"] = nc1
+        return self.logits(params, x), new_cache
+
+
+def _leaf_init(path: str) -> str:
+    last = path.rsplit(".", 1)[-1]
+    if last in ("bq", "bk", "bv", "conv_b", "dt_bias", "w_base", "A_log"):
+        return "zeros"
+    if last.startswith(("ln", "norm", "mu_")) or last == "D":
+        return "ones"
+    return "normal"
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ===================================================================== #
+# losses / steps (pure functions for jit)
+# ===================================================================== #
+def cross_entropy(logits, labels):
+    """Mean next-token CE.  logits: (B,S,V) or (B,S,CB,V); labels match."""
+    f32 = jnp.float32
+    logits = logits.astype(f32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(model: Model, params, batch):
+    logits, aux = model.forward(params, batch["tokens"],
+                                batch.get("patch_embeds"))
+    loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:]
+                         if batch["labels"].ndim == logits.ndim - 1
+                         else batch["labels"][:, 1:])
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}

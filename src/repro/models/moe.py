@@ -1,0 +1,140 @@
+"""Feed-forward blocks: dense SwiGLU and mixture-of-experts with token-choice
+top-k routing, capacity-bounded sort-based dispatch, and shared experts
+(DeepSeek-V3 style)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import swiglu
+from repro.models.params import InitCtx
+
+def ffn_init(cfg: ModelConfig, ctx: InitCtx, prefix: str,
+             d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": ctx.param(f"{prefix}.w_gate", (d, f), ("embed", "mlp")),
+        "w_up": ctx.param(f"{prefix}.w_up", (d, f), ("embed", "mlp")),
+        "w_down": ctx.param(f"{prefix}.w_down", (f, d), ("mlp", "embed")),
+    }
+
+
+def ffn_forward(p, x):
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def moe_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    p = {
+        "router": ctx.param(f"{prefix}.router", (d, E), ("embed", None)),
+        "w_gate": ctx.param(f"{prefix}.w_gate", (E, d, f),
+                            ("experts", "embed", "expert_mlp")),
+        "w_up": ctx.param(f"{prefix}.w_up", (E, d, f),
+                          ("experts", "embed", "expert_mlp")),
+        "w_down": ctx.param(f"{prefix}.w_down", (E, f, d),
+                            ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(cfg, ctx, f"{prefix}.shared",
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.experts_per_token / cfg.n_experts
+                  * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)          # round up to multiple of 8
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """Token-choice top-k MoE with capacity-bounded sort-based dispatch.
+
+    Tokens are sorted by assigned expert and scattered into a static
+    (E, C, d) buffer (overflow beyond capacity C is dropped, Switch-style);
+    experts run as batched einsums over the buffer; outputs gather back with
+    router weights.  Sharding the ``experts`` axis over the mesh 'model' axis
+    yields expert parallelism; the scatter/gather become all-to-alls.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    C = expert_capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    # DeepSeek-V3 gates with sigmoid + renormalized top-k; classic MoE uses
+    # softmax.  Both covered by renormalizing the selected gates.
+    probs = jax.nn.sigmoid(logits) if cfg.attn_type == "mla" \
+        else jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ---------------------------------------- #
+    flat_e = topi.reshape(-1)                            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k) - starts[se]
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)          # E*C = overflow bin
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xt[st])
+    xbuf = buf[:E * C].reshape(E, C, d)
+    if cfg.act_spec is not None and E % 16 == 0:
+        # expert-parallel intent: pin the dispatch buffer to the model axis
+        # so SPMD lowers dispatch/combine as all-to-alls instead of
+        # replicating the (E, C, d) buffer on every device
+        from jax.sharding import PartitionSpec as P
+        xbuf = jax.lax.with_sharding_constraint(xbuf, P("model", None, None))
+
+    # ---- expert compute (batched over the expert axis) --------------- #
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xbuf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xbuf, p["w_up"])
+    ybuf = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+    if cfg.act_spec is not None and E % 16 == 0:
+        from jax.sharding import PartitionSpec as P
+        ybuf = jax.lax.with_sharding_constraint(ybuf, P("model", None, None))
+
+    # ---- combine ------------------------------------------------------ #
+    ybuf_flat = jnp.concatenate(
+        [ybuf.reshape(E * C, d), jnp.zeros((1, d), ybuf.dtype)], axis=0)
+    y_tok = ybuf_flat[slot] * sw[:, None].astype(ybuf.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[st].add(y_tok.astype(x.dtype))
+
+    out = y.reshape(B, S, d)
+    if "shared" in p:
+        out = out + ffn_forward(p["shared"], x)
+    # auxiliary load-balance loss (Switch-style), returned for the trainer
+    me = jnp.bincount(flat_e, length=E) / (T * k)
+    ce = probs.mean(0)
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+def moe_forward_oracle(p, x, cfg: ModelConfig):
+    """Per-token dense oracle (no capacity drops) for unit tests."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.sigmoid(logits) if cfg.attn_type == "mla" \
+        else jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.experts_per_token)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(xt)
+    for e in range(cfg.n_experts):
+        w_e = jnp.where(topi == e, topv, 0.0).sum(-1)     # (T,)
+        ye = swiglu(xt, p["w_gate"][e], p["w_up"][e], p["w_down"][e])
+        y = y + w_e[:, None].astype(ye.dtype) * ye
+    out = y.reshape(B, S, d)
+    if "shared" in p:
+        out = out + ffn_forward(p["shared"], x)
+    return out

@@ -1,0 +1,70 @@
+"""Parameter construction with logical sharding axes.
+
+Every parameter is created through ``InitCtx.param`` which returns either a
+real initialized array or a ShapeDtypeStruct (``abstract=True``, used by the
+dry-run so no host memory is ever allocated), while recording the parameter's
+*logical* axis names.  ``dist/sharding.py`` maps logical axes onto mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class InitCtx:
+    """Threads RNG, dtype, and abstractness through module initializers."""
+    key: jax.Array | None
+    dtype: Any
+    abstract: bool
+    axes: dict = dataclasses.field(default_factory=dict)
+    _counter: int = 0
+
+    def _next_key(self):
+        self._counter += 1
+        return jax.random.fold_in(self.key, self._counter)
+
+    def param(self, path: str, shape: tuple[int, ...], logical_axes: tuple,
+              *, scale: float | None = None, init: str = "normal",
+              dtype: Any = None):
+        assert len(shape) == len(logical_axes), (path, shape, logical_axes)
+        self.axes[path] = logical_axes
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+            scale = 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(self._next_key(), shape, jnp.float32)
+                * scale).astype(dtype)
+
+
+def tree_from_paths(flat: dict[str, Any]) -> dict:
+    """{'a.b.c': x} -> {'a': {'b': {'c': x}}}"""
+    out: dict = {}
+    for path, v in flat.items():
+        node = out
+        parts = path.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def paths_from_tree(tree: dict, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    for k, v in tree.items():
+        p = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(paths_from_tree(v, p))
+        else:
+            out[p] = v
+    return out

@@ -1,0 +1,124 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import InitCtx
+
+LORA_R = 32      # rank of the data-dependent decay LoRA (w = base + lora(x))
+
+
+def rwkv6_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.head_dim
+
+
+def rwkv6_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    d = cfg.d_model
+    H = rwkv6_heads(cfg)
+    K = cfg.head_dim
+    p = {
+        # token-shift interpolation factors (per channel, per projection)
+        "mu_r": ctx.param(f"{prefix}.mu_r", (d,), ("embed",), init="ones"),
+        "mu_k": ctx.param(f"{prefix}.mu_k", (d,), ("embed",), init="ones"),
+        "mu_v": ctx.param(f"{prefix}.mu_v", (d,), ("embed",), init="ones"),
+        "mu_w": ctx.param(f"{prefix}.mu_w", (d,), ("embed",), init="ones"),
+        "mu_g": ctx.param(f"{prefix}.mu_g", (d,), ("embed",), init="ones"),
+        "w_r": ctx.param(f"{prefix}.w_r", (d, d), ("embed", "heads_x_dim")),
+        "w_k": ctx.param(f"{prefix}.w_k", (d, d), ("embed", "heads_x_dim")),
+        "w_v": ctx.param(f"{prefix}.w_v", (d, d), ("embed", "heads_x_dim")),
+        "w_g": ctx.param(f"{prefix}.w_g", (d, d), ("embed", "heads_x_dim")),
+        "w_o": ctx.param(f"{prefix}.w_o", (d, d), ("heads_x_dim", "embed")),
+        # data-dependent decay: w_t = base + B(tanh(A x_t))  (LoRA form)
+        "w_base": ctx.param(f"{prefix}.w_base", (d,), ("embed",), init="zeros"),
+        "w_lora_a": ctx.param(f"{prefix}.w_lora_a", (d, LORA_R),
+                              ("embed", None)),
+        "w_lora_b": ctx.param(f"{prefix}.w_lora_b", (LORA_R, d),
+                              (None, "embed")),
+        "u": ctx.param(f"{prefix}.u", (H, K), ("heads", "head_dim"),
+                       scale=0.1),
+        "ln_x": ctx.param(f"{prefix}.ln_x", (d,), ("embed",), init="ones"),
+        # channel mix
+        "mu_ck": ctx.param(f"{prefix}.mu_ck", (d,), ("embed",), init="ones"),
+        "w_ck": ctx.param(f"{prefix}.w_ck", (d, cfg.d_ff), ("embed", "mlp")),
+        "w_cv": ctx.param(f"{prefix}.w_cv", (cfg.d_ff, d), ("mlp", "embed")),
+        "w_cr": ctx.param(f"{prefix}.w_cr", (d, d), ("embed", "embed_out")),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; position 0 takes ``last`` (carried state)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decay(p, xw, clamp: float):
+    lora = jnp.einsum("blr,re->ble",
+                      jnp.tanh(jnp.einsum("bld,dr->blr", xw, p["w_lora_a"])),
+                      p["w_lora_b"])
+    w = -jnp.exp(jnp.clip(p["w_base"][None, None].astype(jnp.float32)
+                          + lora.astype(jnp.float32), -8.0, 2.0))
+    return jnp.clip(w, -clamp, -1e-4)
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, shift_state=None,
+                   wkv_state=None, return_state: bool = False):
+    """x: (B, L, d) -> (B, L, d).  States carried for streaming decode."""
+    B_, L, d = x.shape
+    H, K = rwkv6_heads(cfg), cfg.head_dim
+    last = shift_state if shift_state is not None else jnp.zeros(
+        (B_, d), x.dtype)
+    xs = _token_shift(x, last)
+
+    def mix(mu):
+        return x * mu[None, None] + xs * (1.0 - mu[None, None])
+
+    r = jnp.einsum("bld,de->ble", mix(p["mu_r"]), p["w_r"]).reshape(B_, L, H, K)
+    k = jnp.einsum("bld,de->ble", mix(p["mu_k"]), p["w_k"]).reshape(B_, L, H, K)
+    v = jnp.einsum("bld,de->ble", mix(p["mu_v"]), p["w_v"]).reshape(B_, L, H, K)
+    g = jax.nn.silu(jnp.einsum("bld,de->ble", mix(p["mu_g"]), p["w_g"]))
+    w = _decay(p, mix(p["mu_w"]), cfg.rwkv_w_clamp).reshape(B_, L, H, K)
+
+    res = kops.rwkv6_scan(r, k, v, w, p["u"], chunk=min(cfg.rwkv_chunk, L),
+                          initial_state=wkv_state, return_state=return_state,
+                          use_pallas=cfg.use_pallas)
+    y, final = res if return_state else (res, None)
+    y = y.reshape(B_, L, d)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    out = jnp.einsum("bld,de->ble", y, p["w_o"])
+    if return_state:
+        return out, final, x[:, -1, :]
+    return out
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, *, shift_state=None,
+                      return_state: bool = False):
+    B_, L, d = x.shape
+    last = shift_state if shift_state is not None else jnp.zeros(
+        (B_, d), x.dtype)
+    xs = _token_shift(x, last)
+    xk = x * p["mu_ck"][None, None] + xs * (1.0 - p["mu_ck"][None, None])
+    k = jnp.einsum("bld,df->blf", xk, p["w_ck"])
+    kv = jnp.einsum("blf,fd->bld", jnp.square(jax.nn.relu(k)), p["w_cv"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xk, p["w_cr"]))
+    out = rgate * kv
+    if return_state:
+        return out, x[:, -1, :]
+    return out
+
+
+def rwkv6_state_init(cfg: ModelConfig, ctx: InitCtx, prefix: str,
+                     batch: int) -> dict:
+    H, K = rwkv6_heads(cfg), cfg.head_dim
+    return {
+        "wkv": ctx.param(f"{prefix}.wkv", (batch, H, K, K),
+                         ("batch", "heads", None, None), init="zeros",
+                         dtype=jnp.float32),
+        "shift_t": ctx.param(f"{prefix}.shift_t", (batch, cfg.d_model),
+                             ("batch", "embed"), init="zeros"),
+        "shift_c": ctx.param(f"{prefix}.shift_c", (batch, cfg.d_model),
+                             ("batch", "embed"), init="zeros"),
+    }

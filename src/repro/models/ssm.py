@@ -1,0 +1,121 @@
+"""Mamba2 block (selective state-space with state-space duality scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import InitCtx
+
+
+def mamba2_init(cfg: ModelConfig, ctx: InitCtx, prefix: str) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    return {
+        # fused input projection: [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": ctx.param(f"{prefix}.w_in", (d, 2 * di + 2 * N + H),
+                          ("embed", "inner")),
+        "conv_w": ctx.param(f"{prefix}.conv_w", (cfg.ssm_conv, conv_dim),
+                            (None, "inner"), scale=0.5),
+        "conv_b": ctx.param(f"{prefix}.conv_b", (conv_dim,), ("inner",),
+                            init="zeros"),
+        "A_log": ctx.param(f"{prefix}.A_log", (H,), (None,), init="zeros"),
+        "D": ctx.param(f"{prefix}.D", (H,), (None,), init="ones"),
+        "dt_bias": ctx.param(f"{prefix}.dt_bias", (H,), (None,), init="zeros"),
+        "norm_w": ctx.param(f"{prefix}.norm_w", (di,), ("inner",), init="ones"),
+        "w_out": ctx.param(f"{prefix}.w_out", (di, d), ("inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d over the sequence.  xbc: (B, L, Cdim)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None])
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, *, state=None, conv_state=None,
+                   return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, L, d_model)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B_, L, _ = x.shape
+    proj = jnp.einsum("bld,de->ble", x, p["w_in"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(B_, L, H, P)
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None, None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    res = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, L),
+                        initial_state=state, return_state=return_state,
+                        use_pallas=cfg.use_pallas)
+    y, final = res if return_state else (res, None)
+    y = y + xs * p["D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(B_, L, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+    if return_state:
+        # conv state: last (K-1) pre-conv channels for streaming decode
+        K = cfg.ssm_conv
+        pre = jnp.einsum("bld,de->ble", x, p["w_in"])
+        _, xbc_raw, _ = _split_proj(cfg, pre)
+        new_conv = xbc_raw[:, -(K - 1):, :]
+        return out, final, new_conv
+    return out
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, state, conv_state):
+    """Single-token recurrent step.
+
+    x: (B, 1, d); state: (B, H, P, N); conv_state: (B, K-1, conv_dim).
+    """
+    from repro.kernels.ref import ssd_decode_step
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B_ = x.shape[0]
+    proj = jnp.einsum("bld,de->ble", x, p["w_in"])
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    # streaming causal conv: window = [conv_state, current]
+    win = jnp.concatenate([conv_state, xbc_raw], axis=1)     # (B, K, Cdim)
+    conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)[:, None, :]
+    xs = xbc[..., :di].reshape(B_, H, P)
+    Bm = xbc[:, 0, di:di + N]
+    Cm = xbc[:, 0, di + N:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32)[None])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(state, xs, dt1, A, Bm, Cm)
+    y = y + xs * p["D"].astype(xs.dtype)[None, :, None]
+    y = y.reshape(B_, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+    new_conv = win[:, 1:, :]
+    return out, new_state, new_conv
+
+
+def mamba2_state_init(cfg: ModelConfig, ctx: InitCtx, prefix: str,
+                      batch: int) -> dict:
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "ssm": ctx.param(f"{prefix}.ssm",
+                         (batch, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                         ("batch", "heads", None, None), init="zeros",
+                         dtype=jnp.float32),
+        "conv": ctx.param(f"{prefix}.conv",
+                          (batch, cfg.ssm_conv - 1, di + 2 * N),
+                          ("batch", None, "inner"), init="zeros"),
+    }

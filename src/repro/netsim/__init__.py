@@ -1,0 +1,25 @@
+"""Simulated end-to-end transfer environments.
+
+The paper evaluates on three real testbeds (XSEDE Stampede<->Gordon, the DIDCLAB
+LAN testbed, and DIDCLAB<->XSEDE over the Internet).  This container has no WAN,
+so `netsim` provides a physically-grounded throughput law
+``th(cc, p, pp | bw, rtt, buffer, disk, file mix, external load)`` with diurnal
+background traffic, measurement noise, and the Table-1 constants of the paper's
+testbeds.  Every tuner (ours + the six baselines) runs against the same
+environment through the same narrow ``Environment.transfer()`` API, so none of
+them can cheat.
+"""
+from repro.netsim.environment import Environment, TransferParams, ParamBounds
+from repro.netsim.testbeds import (
+    make_testbed, XSEDE, DIDCLAB, DIDCLAB_XSEDE, TESTBEDS,
+)
+from repro.netsim.workload import Dataset, make_dataset, FILE_CLASSES
+from repro.netsim.traffic import DiurnalTraffic
+from repro.netsim.loggen import generate_history, LogEntry
+
+__all__ = [
+    "Environment", "TransferParams", "ParamBounds", "make_testbed",
+    "XSEDE", "DIDCLAB", "DIDCLAB_XSEDE", "TESTBEDS", "Dataset",
+    "make_dataset", "FILE_CLASSES", "DiurnalTraffic", "generate_history",
+    "LogEntry",
+]

@@ -1,0 +1,49 @@
+"""Diurnal background traffic: peak/off-peak external load.
+
+The paper evaluates under peak and off-peak hours (XSEDE: generic diurnal WAN
+load; DIDCLAB: university LAN peaking 11am-3pm).  External load is the fraction
+of link capacity consumed by unlogged traffic, i.e. the quantity the paper's
+load-intensity heuristic I_s = (bw - th_out)/bw estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+DAY_S = 24 * 3600.0
+
+
+@dataclasses.dataclass
+class DiurnalTraffic:
+    """Sinusoidal-plus-noise diurnal load pattern in [0, 1)."""
+    base_load: float = 0.10          # off-peak floor
+    peak_load: float = 0.55          # added at the busiest hour
+    peak_hour: float = 13.0          # center of the busy period
+    peak_width_h: float = 4.0        # gaussian width of the busy period
+    jitter: float = 0.04             # slow random walk amplitude
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._walk = 0.0
+
+    def load_at(self, t_s: float) -> float:
+        hour = (t_s % DAY_S) / 3600.0
+        # circular distance to the peak hour
+        d = min(abs(hour - self.peak_hour), 24.0 - abs(hour - self.peak_hour))
+        diurnal = self.peak_load * math.exp(-0.5 * (d / self.peak_width_h) ** 2)
+        self._walk = 0.98 * self._walk + self._rng.normal(0.0, self.jitter)
+        load = self.base_load + diurnal + self._walk
+        return float(min(max(load, 0.0), 0.95))
+
+    def is_peak(self, t_s: float) -> bool:
+        hour = (t_s % DAY_S) / 3600.0
+        d = min(abs(hour - self.peak_hour), 24.0 - abs(hour - self.peak_hour))
+        return d <= self.peak_width_h
+
+    @staticmethod
+    def constant(load: float) -> "DiurnalTraffic":
+        t = DiurnalTraffic(base_load=load, peak_load=0.0, jitter=0.0)
+        return t

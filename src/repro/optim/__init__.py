@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_utils import clip_by_global_norm, global_norm
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "clip_by_global_norm", "global_norm"]

@@ -1,0 +1,30 @@
+"""Gradient utilities: global-norm clipping and int8 compression codecs
+(the quantized-all-reduce path in dist/collectives.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale
+                                   ).astype(l.dtype), tree), norm
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization -> (q, scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,126 @@
+"""Training step + loop: grad accumulation (microbatching), clipping, AdamW,
+activation sharding constraints, and step-time telemetry feeding the
+straggler detector."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model, loss_fn
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    max_grad_norm: float = 1.0
+    microbatches: int = 1          # gradient accumulation steps
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``microbatches > 1`` the global batch is split along the batch axis
+    and gradients accumulate in f32 across a lax.scan — per-device live
+    activation memory scales with the microbatch, not the global batch.
+    """
+    n_micro = tcfg.microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss_a, grads_a, metrics_a = acc
+                loss, metrics, grads = grads_of(params, mb)
+                grads32 = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_a, grads)
+                return (loss_a + loss / n_micro, grads32,
+                        {k: metrics_a[k] + metrics[k] / n_micro
+                         for k in metrics}), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"ce": jnp.zeros((), jnp.float32),
+                      "aux": jnp.zeros((), jnp.float32)}
+            (loss, grads32, metrics), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g, zero_m), micro)
+            grads = jax.tree.map(lambda g, p: (g / n_micro).astype(p.dtype),
+                                 grads32, params)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr_scale = cosine_schedule(opt_state["step"],
+                                   warmup=tcfg.warmup_steps,
+                                   total=tcfg.total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, tcfg.opt,
+                                         lr_scale)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr_scale=lr_scale)
+        return params, opt_state, metrics
+
+    return step
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig,
+                     abstract: bool = False):
+    params, axes = model.init(key, abstract=abstract)
+    opt_state = adamw_init(params, tcfg.opt, abstract=abstract)
+    return params, opt_state, axes
+
+
+def opt_state_axes(params_axes: dict[str, tuple]) -> dict[str, tuple]:
+    """Optimizer-state logical axes mirror the parameter axes."""
+    out = {}
+    for name in ("m", "v", "master"):
+        for path, ax in params_axes.items():
+            out[f"{name}.{path}"] = ax
+    out["step"] = ()
+    return out
+
+
+class Trainer:
+    """Host-side loop: data in, metrics out, step-time telemetry recorded."""
+
+    def __init__(self, model: Model, tcfg: TrainConfig, key):
+        self.model = model
+        self.tcfg = tcfg
+        self.params, self.opt_state, self.axes = init_train_state(
+            model, key, tcfg)
+        self.step_fn = jax.jit(make_train_step(model, tcfg))
+        self.step_times: list[float] = []
+        self.metrics_log: list[dict] = []
+        self.step = 0
+
+    def run(self, batches, *, on_step=None) -> list[dict]:
+        for batch in batches:
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step_time_s"] = dt
+            m["step"] = self.step
+            self.metrics_log.append(m)
+            if on_step is not None:
+                on_step(self.step, m)
+            self.step += 1
+        return self.metrics_log

@@ -1,0 +1,187 @@
+"""Offline knowledge discovery: clustering, surfaces, maxima, regions."""
+import numpy as np
+import pytest
+
+from repro.core.clustering import fit_clusters, kmeans, hac_upgma, ch_index
+from repro.core.contention import (
+    load_intensity, intensity_bins, residual_intensity_bins,
+)
+from repro.core.maxima import find_local_maxima, integer_argmax
+from repro.core.offline import offline_analysis
+from repro.core.regions import identify_sampling_regions
+from repro.core.spline import TricubicSurface
+from repro.core.surfaces import fit_surface, surface_accuracy, fit_poly_surface
+from repro.netsim import (
+    make_testbed, generate_history, ParamBounds, TransferParams,
+)
+
+
+@pytest.fixture(scope="module")
+def history():
+    env = make_testbed("xsede", seed=3)
+    return generate_history(env, days=7, transfers_per_day=150, seed=0)
+
+
+@pytest.fixture(scope="module")
+def db(history):
+    return offline_analysis(history, seed=0)
+
+
+# ---------------------------- clustering ---------------------------- #
+def test_kmeans_separates_blobs():
+    rng = np.random.default_rng(0)
+    X = np.concatenate([rng.normal(0, 0.3, (40, 2)),
+                        rng.normal(5, 0.3, (40, 2)),
+                        rng.normal([0, 8], 0.3, (40, 2))])
+    labels, _ = kmeans(X, 3, seed=1)
+    # all points of a blob share a label
+    for blk in (slice(0, 40), slice(40, 80), slice(80, 120)):
+        assert len(np.unique(labels[blk])) == 1
+    assert len(np.unique(labels)) == 3
+
+
+def test_hac_separates_blobs():
+    rng = np.random.default_rng(1)
+    X = np.concatenate([rng.normal(0, 0.2, (15, 3)),
+                        rng.normal(6, 0.2, (15, 3))])
+    labels = hac_upgma(X, 2)
+    assert len(np.unique(labels[:15])) == 1
+    assert len(np.unique(labels[15:])) == 1
+    assert labels[0] != labels[-1]
+
+
+def test_ch_index_prefers_true_k():
+    rng = np.random.default_rng(2)
+    X = np.concatenate([rng.normal(i * 6, 0.4, (30, 2)) for i in range(3)])
+    scores = {}
+    for m in (2, 3, 4, 5):
+        labels, _ = kmeans(X, m, seed=0)
+        scores[m] = ch_index(X, labels)
+    assert max(scores, key=scores.get) == 3
+
+
+def test_fit_clusters_selects_reasonable_m(history):
+    X = np.stack([e.features() for e in history])
+    cm = fit_clusters(X, seed=0)
+    assert 2 <= cm.m <= 8
+    assert cm.assign(X[0]) == cm.labels[0]
+
+
+# ---------------------------- surfaces ------------------------------ #
+def test_fit_surface_prediction_quality(history):
+    sel = [e for e in history if e.avg_file_mb > 500][:200]
+    surf = fit_surface(sel, 0.5, ParamBounds())
+    acc = surface_accuracy(surf, sel)
+    assert acc > 55.0, f"spline surface accuracy too low: {acc}"
+    assert surf.sigma > 0
+    b = surf.argmax_params
+    assert 1 <= b.cc <= 16 and 1 <= b.p <= 16 and 1 <= b.pp <= 16
+
+
+def test_spline_beats_regressions(history):
+    """The paper's Fig 3b claim: piecewise cubic spline > cubic > quadratic."""
+    sel = [e for e in history if e.avg_file_mb > 500]
+    train, test = sel[::2], sel[1::2]
+    spline = fit_surface(train, 0.5, ParamBounds())
+    quad = fit_poly_surface(train, 2)
+    acc_spline = surface_accuracy(spline, test)
+    acc_quad = surface_accuracy(quad, test)
+    assert acc_spline > acc_quad
+
+
+def test_confidence_band_membership(history):
+    sel = [e for e in history if e.avg_file_mb < 10][:150]
+    surf = fit_surface(sel, 0.3, ParamBounds())
+    prm = surf.argmax_params
+    pred = surf.predict(prm)
+    assert surf.in_confidence(prm, pred)
+    assert surf.in_confidence(prm, pred + 1.9 * surf.sigma)
+    assert not surf.in_confidence(prm, pred + 2.1 * surf.sigma)
+    assert surf.above_band(prm, pred + 3 * surf.sigma)
+    assert not surf.above_band(prm, pred - 3 * surf.sigma)
+
+
+# ---------------------------- maxima -------------------------------- #
+def test_integer_argmax_finds_planted_peak():
+    g = np.arange(1.0, 17.0)
+    P, C, Q = np.meshgrid(g, g, g, indexing="ij")
+    vals = -((P - 6) ** 2 + (C - 9) ** 2 + (Q - 4) ** 2).astype(float)
+    surf = TricubicSurface.fit(g, g, g, vals)
+    prm, val = integer_argmax(surf, ParamBounds())
+    assert (prm.p, prm.cc, prm.pp) == (6, 9, 4)
+
+
+def test_hessian_certifies_interior_max():
+    g = np.arange(1.0, 17.0)
+    P, C, Q = np.meshgrid(g, g, g, indexing="ij")
+    vals = -((P - 8) ** 2 + (C - 8) ** 2 + (Q - 8) ** 2).astype(float)
+    surf = TricubicSurface.fit(g, g, g, vals)
+    maxima = find_local_maxima(surf, ParamBounds())
+    assert any(m.interior for m in maxima)
+    top = maxima[0]
+    assert top.params.as_tuple() == (8, 8, 8)
+
+
+def test_boundary_max_detected():
+    g = np.arange(1.0, 17.0)
+    P, C, Q = np.meshgrid(g, g, g, indexing="ij")
+    vals = (P + C + Q).astype(float)          # max at the (16,16,16) corner
+    surf = TricubicSurface.fit(g, g, g, vals)
+    prm, _ = integer_argmax(surf, ParamBounds())
+    assert prm.as_tuple() == (16, 16, 16)
+
+
+# ---------------------------- regions ------------------------------- #
+def test_sampling_regions(db):
+    ck = db.clusters[0]
+    region = ck.region
+    assert len(region.maxima_points) >= len(ck.surfaces)
+    if len(ck.surfaces) >= 2:
+        assert len(region.discriminative_points) >= 1
+        # separations sorted descending
+        assert all(a >= b for a, b in
+                   zip(region.separations, region.separations[1:]))
+
+
+# ---------------------------- contention ---------------------------- #
+def test_load_intensity_bounds(history):
+    for e in history[:100]:
+        assert 0.0 <= load_intensity(e) <= 1.0
+
+
+def test_intensity_bins_partition(history):
+    idx, centers = intensity_bins(history, 4)
+    assert idx.min() >= 0 and idx.max() <= 3
+    assert len(idx) == len(history)
+
+
+def test_residual_bins_track_true_load(history, db):
+    """Binning by residual ratio must order bins by the (latent) true load."""
+    ck = max(db.clusters, key=lambda c: len(c.entries))
+    base = fit_surface(ck.entries, 0.5, ParamBounds())
+    idx, centers = residual_intensity_bins(ck.entries, 4, base.surface)
+    true_by_bin = [np.median([e.ext_load for e, i in zip(ck.entries, idx)
+                              if i == b]) for b in range(4)]
+    order = np.argsort(centers)
+    sorted_loads = np.array(true_by_bin)[order]
+    # lighter-tagged bins must have (weakly) lighter true loads end-to-end
+    assert sorted_loads[0] < sorted_loads[-1]
+
+
+# ---------------------------- offline DB ---------------------------- #
+def test_offline_db_query_constant_shape(db, history):
+    ck = db.query(history[0].features())
+    assert ck.surfaces
+    assert all(s1.load_intensity <= s2.load_intensity for s1, s2 in
+               zip(ck.sorted_by_load(), ck.sorted_by_load()[1:]))
+
+
+def test_offline_db_additive_update(db, history):
+    env = make_testbed("xsede", seed=11)
+    fresh = generate_history(env, days=1, transfers_per_day=60, seed=42)
+    before = [len(c.entries) for c in db.clusters]
+    db.update(fresh)
+    after = [len(c.entries) for c in db.clusters]
+    assert sum(after) == sum(before) + len(fresh)
+    for ck in db.clusters:
+        assert ck.surfaces  # refit surfaces still present

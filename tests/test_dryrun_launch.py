@@ -1,0 +1,72 @@
+"""Launch-layer integration: the multi-pod dry-run machinery itself.
+
+Runs the real dryrun entry point in a subprocess (it must set XLA_FLAGS
+before importing jax, so it cannot run in-process with the rest of the
+suite) for one cheap cell on both production meshes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("flags", [[], ["--multi-pod"]])
+def test_dryrun_cell_compiles(tmp_path, flags):
+    out = tmp_path / "dr.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6-1.6b", "--shape", "decode_32k",
+         "--out", str(out)] + flags,
+        capture_output=True, text=True, env=env, timeout=420, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rows = json.load(open(out))
+    assert len(rows) == 1 and "error" not in rows[0]
+    r = rows[0]
+    assert r["n_devices"] == (512 if flags else 256)
+    assert r["flops_total"] > 0
+    assert r["bytes_per_device"]["peak"] > 0
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = f32[256]{0} all-reduce(%y), to_apply=%add
+  %cp.1 = bf16[8,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %nothing = f32[4]{0} add(%a, %b)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 1024 * 2
+    assert got["all-reduce"] == 256 * 4
+    assert got["collective-permute"] == 64 * 2
+    assert "add" not in got
+
+
+def test_roofline_terms_math():
+    from repro.launch.roofline import roofline_terms, CHIP_FLOPS
+    row = {"arch": "rwkv6-1.6b", "shape": "train_4k",
+           "flops_total": CHIP_FLOPS, "bytes_accessed": 819e9,
+           "collective_bytes_total": 50e9}
+    t = roofline_terms(row)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == pytest.approx(1.0)
+    assert t["dominant"] in ("compute", "memory", "collective")
+
+
+def test_applicable_cells_cover_assignment():
+    from repro.launch.shapes import applicable_cells, LONG_CONTEXT_OK
+    cells = applicable_cells()
+    archs = {a for a, _ in cells}
+    assert len(archs) == 10
+    # 10 archs x 4 shapes - 7 long_500k skips = 33
+    assert len(cells) == 33
+    for a, s in cells:
+        if s == "long_500k":
+            assert a in LONG_CONTEXT_OK

@@ -1,0 +1,166 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret mode), with shape/dtype
+sweeps, plus chunked-vs-sequential oracle equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssm_scan import ssd_pallas
+from repro.kernels.rwkv6 import rwkv6_pallas
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ----------------------------- attention ----------------------------- #
+ATTN_CASES = [
+    # (B, Sq, Sk, Hq, Hkv, D, causal, window, dtype)
+    (1, 128, 128, 4, 2, 64, True, 0, jnp.float32),
+    (2, 256, 256, 4, 4, 128, True, 0, jnp.float32),
+    (1, 128, 128, 8, 2, 64, True, 64, jnp.float32),
+    (1, 128, 256, 4, 2, 64, False, 0, jnp.float32),
+    (1, 256, 256, 2, 1, 128, True, 128, jnp.float32),
+    (2, 128, 128, 4, 2, 64, True, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, window, dtype = case
+    q = _rand((B, Sq, Hq, D), dtype)
+    k = _rand((B, Sk, Hkv, D), dtype)
+    v = _rand((B, Sk, Hkv, D), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_offset=Sk - Sq, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=Sk - Sq)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    q = _rand((1, 256, 4, 64)); k = _rand((1, 256, 2, 64))
+    v = _rand((1, 256, 2, 64))
+    a = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
+    b = flash_attention_pallas(q, k, v, bq=64, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ----------------------------- SSD (Mamba2) --------------------------- #
+SSD_CASES = [
+    # (B, L, H, P, N, chunk, dtype)
+    (2, 64, 4, 8, 16, 16, jnp.float32),
+    (1, 128, 2, 16, 32, 32, jnp.float32),
+    (1, 96, 3, 8, 8, 32, jnp.float32),      # padded path (96 % 32 == 0) -> exact
+    (2, 80, 2, 8, 16, 32, jnp.float32),     # 80 % 32 != 0 -> padding branch
+    (1, 64, 4, 8, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_pallas_matches_oracle(case):
+    B, L, H, P, N, chunk, dtype = case
+    x = _rand((B, L, H, P), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, L, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = _rand((B, L, N))
+    Cm = _rand((B, L, N))
+    got = ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    want = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunked_matches_sequential(B, H, seed):
+    rng = np.random.default_rng(seed)
+    L, P, N = 48, 4, 8
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, (B, L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.2, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y1, s1 = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=16,
+                                 return_state=True)
+    y2, s2 = ref.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-3)
+
+
+# ------------------------------- RWKV6 -------------------------------- #
+RWKV_CASES = [
+    # (B, L, H, K, V, chunk, dtype)
+    (2, 64, 4, 8, 8, 16, jnp.float32),
+    (1, 128, 2, 16, 16, 16, jnp.float32),
+    (2, 72, 2, 8, 8, 16, jnp.float32),      # padding branch
+    (1, 64, 4, 8, 8, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+def test_rwkv6_pallas_matches_oracle(case):
+    B, L, H, K, V, chunk, dtype = case
+    r = _rand((B, L, H, K), dtype)
+    k = _rand((B, L, H, K), dtype)
+    v = _rand((B, L, H, V), dtype)
+    w = jnp.asarray(-RNG.uniform(0.01, 3.0, (B, L, H, K)), jnp.float32)
+    u = _rand((H, K))
+    got = rwkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    want = ref.rwkv6_chunked_ref(r, k, v, w, u, chunk=chunk)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_rwkv6_chunked_matches_sequential(B, H, seed):
+    rng = np.random.default_rng(seed)
+    L, K, V = 48, 8, 8
+    r = jnp.asarray(rng.normal(size=(B, L, H, K)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, H, K)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, H, V)), jnp.float32)
+    w = jnp.asarray(-rng.uniform(0.01, 3.5, (B, L, H, K)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    y1, s1 = ref.rwkv6_chunked_ref(r, k, v, w, u, chunk=16, return_state=True)
+    y2, s2 = ref.rwkv6_sequential_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=5e-4,
+                               rtol=1e-3)
+
+
+# ----------------------- decode-step consistency ---------------------- #
+def test_ssd_decode_step_matches_scan_tail():
+    B, L, H, P, N = 1, 33, 2, 4, 8
+    x = _rand((B, L, H, P))
+    dt = jnp.asarray(RNG.uniform(0.05, 0.2, (B, L, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 1.0, (H,)), jnp.float32)
+    Bm = _rand((B, L, N)); Cm = _rand((B, L, N))
+    y_all, state = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=16,
+                                       return_state=True)
+    # replay the last token from the state after L-1 tokens
+    _, state_prev = ref.ssd_chunked_ref(x[:, :-1], dt[:, :-1], A,
+                                        Bm[:, :-1], Cm[:, :-1], chunk=16,
+                                        return_state=True)
+    y_t, state_t = ref.ssd_decode_step(state_prev, x[:, -1], dt[:, -1], A,
+                                       Bm[:, -1], Cm[:, -1])
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_all[:, -1]),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state_t), np.asarray(state),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,75 @@
+"""Pipeline parallelism: GPipe schedule correctness on a host mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.dist.pipeline_par import (PipelineConfig, make_pipeline_fn,
+                                     split_stages)
+
+
+def test_bubble_fraction():
+    assert PipelineConfig(4, 12).bubble_fraction == pytest.approx(3 / 15)
+    assert PipelineConfig(1, 8).bubble_fraction == 0.0
+
+
+def test_split_stages():
+    params = {"w": jnp.arange(24.0).reshape(8, 3)}
+    out = split_stages(params, 4)
+    assert out["w"].shape == (4, 2, 3)
+    np.testing.assert_allclose(out["w"][0], params["w"][:2])
+
+
+def test_pipeline_matches_sequential():
+    """Pipelined execution == plain sequential layer application (S=1 mesh,
+    the schedule/permute logic still runs end to end)."""
+    L, d = 4, 8
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.normal(size=(L, d, d)) * 0.3,
+                                jnp.float32)}
+
+    def layer_slice(params, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, params["w"])
+        return x
+
+    # sequential ground truth
+    def sequential(x):
+        return layer_slice(stacked, x)
+
+    M, mb = 3, 5
+    xs = jnp.asarray(rng.normal(size=(M, mb, d)), jnp.float32)
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("stage",))
+    pcfg = PipelineConfig(n_stages=1, n_microbatches=M)
+    fn = make_pipeline_fn(layer_slice, mesh, pcfg)
+    got = fn(split_stages(stacked, 1), xs)
+    want = jnp.stack([sequential(xs[i]) for i in range(M)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_lowers_multistage():
+    """4-stage pipeline lowers+compiles on a 4-device placeholder mesh —
+    the same check the production dry-run applies."""
+    import os
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices (dry-run sets "
+                    "xla_force_host_platform_device_count)")
+    L, d = 8, 4
+    stacked = {"w": jnp.zeros((L, d, d), jnp.float32)}
+
+    def layer_slice(params, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, params["w"])
+        return x
+
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(4), ("stage",))
+    pcfg = PipelineConfig(n_stages=4, n_microbatches=8)
+    fn = make_pipeline_fn(layer_slice, mesh, pcfg)
+    xs = jnp.zeros((8, 2, d), jnp.float32)
+    lowered = jax.jit(fn).lower(split_stages(stacked, 4), xs)
+    assert "collective-permute" in lowered.compile().as_text()

@@ -1,0 +1,124 @@
+"""Spline machinery vs. scipy + interpolation invariants (Sec. 3.1.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.interpolate import CubicSpline as SciSpline
+
+from repro.core.spline import (
+    CubicSpline1D, BicubicSpline, TricubicSurface, PolySurface,
+    nat_spline_coeffs, nat_spline_eval,
+)
+
+
+def test_cubic1d_matches_scipy_natural():
+    x = np.array([1.0, 2.0, 4.0, 8.0, 16.0])
+    y = np.array([3.0, 5.0, 4.0, 9.0, 2.0])
+    ours = CubicSpline1D.fit(x, y)
+    sci = SciSpline(x, y, bc_type="natural")
+    xq = np.linspace(1, 16, 64)
+    got = np.array([float(ours(q)) for q in xq])
+    np.testing.assert_allclose(got, sci(xq), rtol=1e-4, atol=1e-4)
+
+
+def test_packed_spline_matches_scipy():
+    rng = np.random.default_rng(0)
+    x = np.array([1.0, 3.0, 4.0, 9.0, 12.0, 16.0])
+    Y = rng.normal(size=(5, 6))
+    coeffs = nat_spline_coeffs(x, Y)
+    xq = np.linspace(1, 16, 33)
+    got = nat_spline_eval(x, coeffs, xq)
+    for r in range(5):
+        sci = SciSpline(x, Y[r], bc_type="natural")
+        np.testing.assert_allclose(got[r], sci(xq), rtol=1e-8, atol=1e-8)
+
+
+@given(st.integers(3, 8), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_spline_interpolates_nodes(n, seed):
+    """Property: the interpolant passes through every data point."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.choice(np.arange(1, 33), size=n, replace=False)).astype(float)
+    y = rng.normal(size=n) * 10
+    coeffs = nat_spline_coeffs(x, y[None])
+    got = nat_spline_eval(x, coeffs, x)[0]
+    np.testing.assert_allclose(got, y, rtol=1e-7, atol=1e-7)
+
+
+@given(st.integers(4, 7), st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_spline_c2_continuity(n, seed):
+    """Property: first and second derivatives match across interior knots."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.choice(np.arange(1, 25), size=n, replace=False)).astype(float)
+    y = rng.normal(size=n) * 5
+    c = nat_spline_coeffs(x, y[None])[0]
+    for i in range(1, n - 1):
+        h = x[i] - x[i - 1]
+        a, b_, cc, d = c[i - 1]
+        left_d1 = b_ + 2 * cc * h + 3 * d * h * h
+        left_d2 = 2 * cc + 6 * d * h
+        right_d1 = c[i, 1]
+        right_d2 = 2 * c[i, 2]
+        np.testing.assert_allclose(left_d1, right_d1, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(left_d2, right_d2, rtol=1e-6, atol=1e-6)
+
+
+def test_bicubic_hits_grid_nodes():
+    rng = np.random.default_rng(1)
+    gx = np.array([1.0, 2.0, 4.0, 8.0])
+    gy = np.array([1.0, 3.0, 6.0])
+    z = rng.normal(size=(4, 3))
+    bs = BicubicSpline.fit(gx, gy, z)
+    for i in range(4):
+        for j in range(3):
+            assert abs(float(bs(gx[i], gy[j])) - z[i, j]) < 1e-5
+
+
+def test_tricubic_hits_grid_nodes_and_batch():
+    rng = np.random.default_rng(2)
+    gp = np.array([1.0, 2.0, 4.0, 8.0])
+    gcc = np.array([1.0, 4.0, 8.0, 16.0])
+    gpp = np.array([1.0, 8.0, 16.0])
+    grid = rng.normal(size=(4, 4, 3)) * 100
+    ts = TricubicSurface.fit(gp, gcc, gpp, grid)
+    pts, want = [], []
+    for i in range(4):
+        for j in range(4):
+            for k in range(3):
+                pts.append([gp[i], gcc[j], gpp[k]])
+                want.append(grid[i, j, k])
+    np.testing.assert_allclose(ts.batch_eval(np.array(pts)), want,
+                               rtol=1e-7, atol=1e-6)
+
+
+def test_tricubic_dense_eval_consistency():
+    rng = np.random.default_rng(3)
+    gp = np.array([1.0, 4.0, 9.0, 16.0])
+    gcc = np.array([1.0, 2.0, 8.0])
+    gpp = np.array([1.0, 4.0, 16.0])
+    ts = TricubicSurface.fit(gp, gcc, gpp, rng.normal(size=(4, 3, 3)))
+    pq = np.array([1.5, 3.0, 7.7])
+    ccq = np.array([1.0, 5.5])
+    ppq = np.array([2.0, 10.0])
+    dense = ts.dense_eval(pq, ccq, ppq)
+    for a, p in enumerate(pq):
+        for b, cc in enumerate(ccq):
+            for k, pp in enumerate(ppq):
+                assert abs(dense[a, b, k] - ts(p, cc, pp)) < 1e-8
+
+
+def test_tricubic_hessian_fd_symmetric():
+    rng = np.random.default_rng(4)
+    gp = gcc = gpp = np.array([1.0, 4.0, 8.0, 12.0, 16.0])
+    ts = TricubicSurface.fit(gp, gcc, gpp, rng.normal(size=(5, 5, 5)))
+    H = ts.hessian_fd(np.array([5.0, 6.0, 7.0]))
+    np.testing.assert_allclose(H, H.T, atol=1e-9)
+    assert H.shape == (3, 3) and np.isfinite(H).all()
+
+
+def test_poly_surface_exact_on_quadratic():
+    rng = np.random.default_rng(5)
+    pts = rng.uniform(1, 16, size=(60, 3))
+    th = 2.0 + 3 * pts[:, 0] - 0.5 * pts[:, 1] ** 2 + pts[:, 2] * pts[:, 0]
+    ps = PolySurface.fit(pts, th, order=2)
+    np.testing.assert_allclose(ps.batch_eval(pts), th, rtol=1e-6, atol=1e-5)
