@@ -46,21 +46,38 @@ class TransferReport:
 
     @property
     def steady_mbps(self) -> float:
-        """Time-weighted steady rate of the bulk phase (excludes probing)."""
+        """Time-weighted steady rate of the bulk phase (excludes probing).
+
+        Degenerate reports stay well-defined: with no bulk records the
+        whole-transfer rate stands in, and zero-duration records (instant
+        chunks from an empty dataset or a mocked environment) fall back to
+        the unweighted mean instead of dividing by zero.
+        """
         bulk = [r for r in self.samples if not r.was_sample]
         if not bulk:
             return self.achieved_mbps
-        w = sum(r.elapsed_s for r in bulk)
-        return sum(r.achieved * r.elapsed_s for r in bulk) / max(w, 1e-9)
+        w = sum(max(r.elapsed_s, 0.0) for r in bulk)
+        if w <= 0.0:
+            return float(sum(r.achieved for r in bulk) / len(bulk))
+        return sum(r.achieved * max(r.elapsed_s, 0.0) for r in bulk) / w
 
     @property
     def prediction_accuracy(self) -> float:
-        """Eq. 25 accuracy of the converged surface's prediction (%)."""
+        """Eq. 25 accuracy of the converged surface's prediction (%).
+
+        0% with no bulk phase (nothing to score); 100% when prediction and
+        achieved are both exactly zero (a vacuously exact prediction); 0%
+        for any other non-positive pair (a negative extrapolated prediction
+        against a stalled transfer must not score well).
+        """
         bulk = [r for r in self.samples if not r.was_sample]
         if not bulk:
             return 0.0
-        pred = max(bulk[-1].predicted, 1e-9)
+        pred = bulk[-1].predicted
         ach = self.steady_mbps
+        if pred <= 0.0 and ach <= 0.0:
+            return 100.0 if pred == 0.0 and ach == 0.0 else 0.0
+        # max(pred, ach) > 0 here, so the relative error is well-defined
         return float(max(0.0, 100.0 * (1.0 - abs(ach - pred) / max(pred, ach))))
 
 

@@ -1,0 +1,170 @@
+"""Gradient collectives: flatten, bucket, quantize, all-reduce — plus the
+paper bridge that tunes the bucketing with ``TransferTuner``.
+
+The paper's tuner (arXiv:1707.09455) optimizes (cc, p, pp) for wide-area
+transfers from offline knowledge plus a few adaptive probes.  Gradient
+all-reduce over the ICI fabric is the same shaped problem: a fixed-capacity
+channel, a setup cost per reconfiguration, and an interior-maximum response
+to concurrency (too few buckets underlaps compute/comm, too many drowns in
+per-launch overhead).  :func:`ici_environment` models the fabric in the same
+``Environment`` law the tuner already understands, and
+:func:`plan_from_tuner_params` maps its converged (cc, p, pp) onto a
+:class:`BucketPlan`:
+
+  * ``cc``  -> concurrent buckets in flight        -> ``n_buckets``
+  * ``p``   -> chunks streamed per bucket          -> ``chunks_per_bucket``
+  * ``pp``  -> launch-pipelining depth             -> ``pipeline_depth``
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.netsim.environment import Environment, LinkSpec, TransferParams
+from repro.optim.grad_utils import (dequantize_int8, int8_scale,
+                                    quantize_int8)
+
+
+# ------------------------- flatten / unflatten ------------------------- #
+def flatten_grads(tree):
+    """Concatenate every leaf into one f32 vector; returns (flat, spec)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec = (treedef, [(l.shape, l.dtype) for l in leaves])
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32), spec
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat, spec
+
+
+def unflatten_grads(flat, spec):
+    """Inverse of :func:`flatten_grads`; restores shapes and dtypes."""
+    treedef, shapes = spec
+    leaves, off = [], 0
+    for shape, dtype in shapes:
+        n = math.prod(shape)
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ------------------------------ bucketing ------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """How a flat gradient is cut up for the all-reduce stream.
+
+    ``n_buckets * chunks_per_bucket`` chunks are reduced in waves of
+    ``pipeline_depth``: each wave is issued as ONE collective over the
+    stacked chunks, amortizing per-launch overhead exactly like the paper's
+    command pipelining ``pp`` amortizes per-file control RTTs.
+    """
+    n_buckets: int = 1
+    chunks_per_bucket: int = 1
+    pipeline_depth: int = 1
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_buckets * self.chunks_per_bucket
+
+
+def _chunked(v, plan: BucketPlan):
+    """(n_chunks, chunk) view of the raveled vector, zero-padded."""
+    flat = jnp.ravel(v)
+    n = max(plan.n_chunks, 1)
+    per = -(-flat.size // n)
+    flat = jnp.pad(flat, (0, n * per - flat.size))
+    return flat.reshape(n, per)
+
+
+def bucketed_allreduce(v, plan: BucketPlan, axis_name: str):
+    """psum ``v`` over ``axis_name`` chunk by chunk (shard_map body).
+
+    Chunks are reduced as independent collectives so XLA can overlap them
+    with producer compute; ``pipeline_depth`` chunks share one launch;
+    padding is stripped on reassembly.
+    """
+    chunks = _chunked(v, plan)
+    depth = max(plan.pipeline_depth, 1)
+    out = jnp.concatenate([
+        lax.psum(chunks[w:w + depth], axis_name).reshape(-1)
+        for w in range(0, chunks.shape[0], depth)])
+    return out[:v.size].reshape(v.shape)
+
+
+def quantized_allreduce(v, plan: BucketPlan, axis_name: str):
+    """int8 bucketed all-reduce: ~4x less ICI traffic than f32.
+
+    Per chunk: agree on a global scale (pmax), quantize symmetrically to
+    int8, reduce in int32 (no overflow up to 2^23 participants), dequantize.
+    Worst-case error is half an int8 step on the chunk's max magnitude.
+    """
+    if v.size == 0:                     # empty param group: nothing to move
+        return v
+    chunks = _chunked(v, plan)
+    depth = max(plan.pipeline_depth, 1)
+    # one scale-agreement collective for all chunks, not one per wave
+    scales = lax.pmax(int8_scale(chunks, axis=1), axis_name)
+    outs = []
+    for w in range(0, chunks.shape[0], depth):
+        block, scale = chunks[w:w + depth], scales[w:w + depth]
+        q, _ = quantize_int8(block, scale[:, None])  # per-chunk scales
+        s = lax.psum(q.astype(jnp.int32), axis_name)
+        outs.append(dequantize_int8(s, scale[:, None]).reshape(-1))
+    out = jnp.concatenate(outs)
+    return out[:v.size].reshape(v.shape).astype(v.dtype)
+
+
+def allreduce_bytes(n_elems: int, elem_bytes: int,
+                    n_devices: int | None = None) -> float:
+    """Bytes moved per participant by a ring all-reduce.
+
+    Reduce-scatter + all-gather each move ``(n-1)/n`` of the buffer; the
+    asymptotic 2x is used when the ring size is unknown.
+    """
+    factor = 2.0 if n_devices is None else \
+        2.0 * (n_devices - 1) / max(n_devices, 1)
+    return float(n_elems) * float(elem_bytes) * factor
+
+
+# --------------------------- the paper bridge --------------------------- #
+ICI_LINK = LinkSpec(
+    name="ici",
+    bandwidth_mbps=784_000.0,      # ~98 GB/s per-direction ICI (v5e-class)
+    rtt_s=1.5e-5,                  # microsecond-scale fabric latency
+    tcp_buffer_mb=2.0,             # per-channel buffering window
+    disk_read_mbps=6_550_000.0,    # HBM read/write bound (~819 GB/s)
+    disk_write_mbps=6_550_000.0,
+    cores=8,                       # DMA engines per chip: concurrency cap
+    congestion_knee=0.90,
+    loss_sensitivity=1.0,          # lossless fabric: gentle over-subscription
+    streams_to_saturate=4,
+)
+
+
+def ici_environment(seed: int = 0, *,
+                    constant_load: float | None = None) -> Environment:
+    """The ICI fabric as a tunable transfer :class:`Environment`.
+
+    Background load models compute-phase contention on the links (collectives
+    from other replicas / overlap with the producer matmuls) with the same
+    diurnal-plus-jitter shape the WAN testbeds use, so the tuner's offline
+    load-binning applies unchanged.
+    """
+    from repro.netsim.traffic import DiurnalTraffic
+    if constant_load is not None:
+        traffic = DiurnalTraffic.constant(constant_load)
+    else:
+        traffic = DiurnalTraffic(base_load=0.15, peak_load=0.50,
+                                 peak_hour=12.0, peak_width_h=8.0,
+                                 jitter=0.05, seed=seed + 23)
+    return Environment(ICI_LINK, traffic, noise_sigma=0.02, seed=seed)
+
+
+def plan_from_tuner_params(params: TransferParams) -> BucketPlan:
+    """Map the tuner's converged (cc, p, pp) onto a :class:`BucketPlan`."""
+    return BucketPlan(n_buckets=max(int(params.cc), 1),
+                      chunks_per_bucket=max(int(params.p), 1),
+                      pipeline_depth=max(int(params.pp), 1))

@@ -1,0 +1,22 @@
+"""jax version shims.
+
+The repo targets the modern ``jax.shard_map`` API (``check_vma=``); older
+pins (0.4.x, including this container's 0.4.37) only ship
+``jax.experimental.shard_map.shard_map`` with the ``check_rep=`` keyword.
+Everything under ``repro.dist`` (and any test that needs ``shard_map``)
+imports it from here so the same code lowers on either jax.
+"""
+from __future__ import annotations
+
+try:                                    # jax >= 0.6: top-level, check_vma
+    from jax import shard_map as _shard_map      # type: ignore[attr-defined]
+    _CHECK_KW = "check_vma"
+except ImportError:                     # jax 0.4.x: experimental, check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` with the new keyword spelling on any supported jax."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

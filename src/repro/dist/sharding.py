@@ -1,0 +1,141 @@
+"""Named-axis sharding rules: logical parameter axes -> mesh axes.
+
+Every parameter records *logical* axis names at init time
+(``models/params.py``); this module maps them onto the physical mesh.  Two
+invariants keep the mapping valid for every architecture x mesh cell the
+dry-run sweeps:
+
+  * **divisibility** — a dim is only sharded if the mesh-axis product divides
+    it; otherwise it degrades to replicated and the degradation is recorded
+    in the :class:`ShardingReport` (llama3's 40 query heads on a 16-way model
+    axis, say, must not crash the launcher);
+  * **one mesh axis per tensor** — a mesh axis may appear at most once in a
+    PartitionSpec; when two logical axes of one tensor map to the same mesh
+    axis (MoE ``experts`` and ``expert_mlp`` both want ``model``), the first
+    wins and the rest replicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.params import paths_from_tree, tree_from_paths
+
+
+@dataclasses.dataclass
+class ShardingReport:
+    """Accumulates every dim that degraded to replicated, with the reason."""
+    degraded: list = dataclasses.field(default_factory=list)
+
+    def note(self, path: str, logical_axis: Any, why: str) -> None:
+        self.degraded.append((path, logical_axis, why))
+
+
+def default_rules(multi_pod: bool) -> dict[str, tuple[str, ...]]:
+    """Logical axis -> tuple of mesh axes the dim shards over.
+
+    ``data`` carries FSDP-style sharding of the residual/embed dim; ``model``
+    carries tensor/expert parallelism; the multi-pod ``pod`` axis only ever
+    splits the batch (pure DP across pods, so gradient all-reduce is the only
+    traffic on the inter-pod links).  Logical axes absent from the rules
+    (``head_dim``, ``layers``, cache/seq axes, LoRA ranks) are replicated.
+    """
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        # fsdp-style weight sharding along the residual dim
+        "embed": ("data",),
+        # tensor parallelism
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "heads_x_dim": ("model",),
+        "mlp": ("model",),
+        "inner": ("model",),
+        "embed_out": ("model",),
+        # expert parallelism (experts claim `model` first; the per-expert
+        # mlp dim then degrades by the one-axis-per-tensor rule)
+        "experts": ("model",),
+        "expert_mlp": ("model",),
+    }
+
+
+def spec_for(shape: tuple[int, ...], logical_axes: tuple, rules: dict,
+             mesh, report: ShardingReport | None = None,
+             path: str = "?") -> P:
+    """PartitionSpec for one tensor, enforcing both invariants above.
+
+    ``mesh`` only needs a ``.shape`` mapping (axis name -> size), so tests
+    can pass a stand-in without building devices.
+    """
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, logical_axes):
+        assigned = rules.get(name) if name is not None else None
+        axes = tuple(a for a in (assigned or ()) if a in mesh.shape)
+        if not axes:
+            entries.append(None)
+            continue
+        if any(a in used for a in axes):
+            if report is not None:
+                report.note(path, name,
+                            f"conflict mesh axes {axes} already used")
+            entries.append(None)
+            continue
+        span = math.prod(mesh.shape[a] for a in axes)
+        if dim % span != 0:
+            if report is not None:
+                report.note(path, name,
+                            f"indivisible dim {dim} % mesh {span} != 0")
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    while entries and entries[-1] is None:      # P("data") == spec, not
+        entries.pop()                           # P("data", None, None)
+    return P(*entries)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh, *, ndim: int, batch_size: int | None = None
+                   ) -> NamedSharding:
+    """Shard dim 0 over the batch mesh axes (``pod`` x ``data`` when present).
+
+    If ``batch_size`` is given and does not divide the full axis span, outer
+    axes are dropped (pod first) until it does — a small smoke-run batch on a
+    big mesh replicates rather than erroring.  ``ndim`` is accepted for call
+    sites that build specs from ShapeDtypeStructs; trailing dims are always
+    unsharded so it never changes the spec.
+    """
+    del ndim
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    while axes and batch_size is not None and \
+            batch_size % math.prod(mesh.shape[a] for a in axes) != 0:
+        axes = axes[1:]
+    if not axes:
+        return replicated(mesh)
+    return NamedSharding(mesh, P(axes[0] if len(axes) == 1 else axes))
+
+
+def tree_shardings(tree, axes_by_path: dict[str, tuple], mesh, rules: dict,
+                   report: ShardingReport | None = None):
+    """NamedSharding pytree matching ``tree``, driven by logical axes.
+
+    Leaves without a recorded axis entry (shouldn't happen for params; can
+    happen for auxiliary state) replicate.
+    """
+    out = {}
+    for path, leaf in paths_from_tree(tree).items():
+        axes = axes_by_path.get(path)
+        if axes is None:
+            out[path] = replicated(mesh)
+        else:
+            out[path] = NamedSharding(
+                mesh, spec_for(leaf.shape, axes, rules, mesh, report, path))
+    return tree_from_paths(out)

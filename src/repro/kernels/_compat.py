@@ -1,0 +1,10 @@
+"""Pallas jax version shims shared by the kernels.
+
+jax 0.4.x spells the TPU compiler-params class ``TPUCompilerParams``;
+newer jax renames it ``CompilerParams``.  Same constructor kwargs either
+way (``dimension_semantics=...``).
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -18,9 +18,19 @@ def clip_by_global_norm(tree, max_norm: float):
                                    ).astype(l.dtype), tree), norm
 
 
-def quantize_int8(x: jnp.ndarray):
-    """Symmetric per-tensor int8 quantization -> (q, scale)."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+def int8_scale(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """Symmetric int8 scale of ``x`` (per-tensor, or per-row via ``axis``)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis) / 127.0 + 1e-12
+
+
+def quantize_int8(x: jnp.ndarray, scale=None):
+    """Symmetric per-tensor int8 quantization -> (q, scale).
+
+    Pass ``scale`` to quantize against an externally agreed scale (the
+    quantized all-reduce pmaxes the per-device scales first).
+    """
+    if scale is None:
+        scale = int8_scale(x)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
                  ).astype(jnp.int8)
     return q, scale

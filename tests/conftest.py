@@ -1,0 +1,11 @@
+"""Suite-wide defaults.
+
+Default to 4 placeholder host devices (set before any jax import — jax
+locks the device count at init) so the multi-stage pipeline-parallel test
+runs instead of skipping on single-device CPU runners.  A caller's own
+XLA_FLAGS wins.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")

@@ -128,6 +128,114 @@ def test_ranking_matches_paper(tuner, xsede_history):
     assert means["ASM"] > means["GO"] + 0.1
 
 
+# --------------------------- report hardening -------------------------- #
+def test_report_degenerate_records_well_defined():
+    """Empty-bulk and zero-duration records must not blow up the report."""
+    from repro.core.online import SampleRecord, TransferReport
+    from repro.netsim.environment import TransferParams
+
+    prm = TransferParams(1, 1, 1)
+
+    # probes only, no bulk phase: steady falls back to the whole-transfer
+    # rate, accuracy has nothing to score
+    rep = TransferReport(prm, 123.0,
+                         [SampleRecord(prm, 10.0, 9.0, 0.1, 1.0, True)],
+                         n_samples=1, total_s=1.0, param_changes=1)
+    assert rep.steady_mbps == 123.0
+    assert rep.prediction_accuracy == 0.0
+
+    # zero-duration bulk chunks: unweighted mean, finite accuracy
+    recs = [SampleRecord(prm, 100.0, 80.0, 0.1, 0.0, False),
+            SampleRecord(prm, 100.0, 120.0, 0.1, 0.0, False)]
+    rep = TransferReport(prm, 0.0, recs, n_samples=0, total_s=0.0,
+                         param_changes=0)
+    assert rep.steady_mbps == pytest.approx(100.0)
+    assert 0.0 <= rep.prediction_accuracy <= 100.0
+
+    # all-zero degenerate transfer: prediction of 0 matched achieved 0
+    recs = [SampleRecord(prm, 0.0, 0.0, 0.1, 0.0, False)]
+    rep = TransferReport(prm, 0.0, recs, n_samples=0, total_s=0.0,
+                         param_changes=0)
+    assert rep.steady_mbps == 0.0
+    assert rep.prediction_accuracy == 100.0
+
+
+# ----------------------- two-strike drift detection --------------------- #
+class _ScriptedSurface:
+    def __init__(self, load, argmax, level, band):
+        self.load_intensity = load
+        self.argmax_params = argmax
+        self._level = level
+        self._band = band
+
+    def predict(self, prm):
+        return self._level
+
+    def in_confidence(self, prm, observed, z=2.0):
+        return abs(observed - self._level) <= self._band
+
+    def above_band(self, prm, observed, z=2.0):
+        return observed > self._level + self._band
+
+
+class _ScriptedEnv:
+    """Replays a fixed throughput sequence; only what the sampler touches."""
+
+    class _Link:
+        bandwidth_mbps = 1000.0
+        rtt_s = 0.01
+
+    def __init__(self, rates):
+        self.link = self._Link()
+        self.clock_s = 0.0
+        self._rates = list(rates)
+
+    def transfer(self, params, size_mb, avg_file_mb, n_files, *,
+                 is_sample=False):
+        from repro.netsim.environment import TransferResult
+        rate = self._rates.pop(0)
+        self.clock_s += 1.0
+        return TransferResult(rate, rate, 1.0)
+
+
+def test_bulk_drift_needs_two_consecutive_strikes():
+    """One out-of-band chunk must NOT re-parameterize; two in a row must."""
+    import types
+    from repro.core.online import AdaptiveSampler
+    from repro.netsim.environment import TransferParams
+    from repro.netsim.workload import Dataset
+
+    p_probe = TransferParams(1, 1, 1)
+    p_light = TransferParams(4, 4, 4)
+    p_heavy = TransferParams(2, 2, 2)
+    light = _ScriptedSurface(0.2, p_light, level=100.0, band=10.0)
+    heavy = _ScriptedSurface(0.8, p_heavy, level=50.0, band=10.0)
+
+    cluster = types.SimpleNamespace(
+        region=types.SimpleNamespace(discriminative_points=[p_probe]),
+        sorted_by_load=lambda: [light, heavy])
+    db = types.SimpleNamespace(query=lambda features: cluster)
+
+    # converge: discriminative probe (100 -> light), argmax probe in-band.
+    # bulk of 8 chunks: in, MISS, in (single strike forgiven), MISS, MISS
+    # (second strike -> jump to the heavy surface), then in-band at 50.
+    env = _ScriptedEnv([100.0, 100.0,
+                        100.0, 40.0, 100.0, 40.0, 40.0, 50.0, 50.0, 50.0])
+    ds = Dataset("scripted", "medium", avg_file_mb=100.0, n_files=100)
+    rep = AdaptiveSampler(db, max_samples=3, bulk_chunks=8).transfer(env, ds)
+
+    bulk = [r for r in rep.samples if not r.was_sample]
+    assert len(bulk) == 8
+    # chunk after the forgiven single miss still runs the light params
+    assert bulk[2].params.as_tuple() == p_light.as_tuple()
+    assert bulk[3].params.as_tuple() == p_light.as_tuple()
+    # after the second consecutive miss the sampler re-parameterized
+    assert bulk[5].params.as_tuple() == p_heavy.as_tuple()
+    assert rep.params.as_tuple() == p_heavy.as_tuple()
+    # exactly one extra param change beyond the two distinct probe points
+    assert rep.param_changes == 3
+
+
 def test_nmt_slow_convergence_penalty(xsede_history):
     """NMT pays for its probes: effective << steady during convergence."""
     env = _fresh_env()

@@ -1,7 +1,8 @@
 """Network-simulator invariants the paper's assumptions rely on."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.netsim import (
     make_testbed, make_dataset, ParamBounds, TransferParams, DiurnalTraffic,

@@ -54,7 +54,6 @@ def test_pipeline_matches_sequential():
 def test_pipeline_lowers_multistage():
     """4-stage pipeline lowers+compiles on a 4-device placeholder mesh —
     the same check the production dry-run applies."""
-    import os
     if len(jax.devices()) < 4:
         pytest.skip("needs >= 4 devices (dry-run sets "
                     "xla_force_host_platform_device_count)")

@@ -1,7 +1,8 @@
 """Spline machinery vs. scipy + interpolation invariants (Sec. 3.1.1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 from scipy.interpolate import CubicSpline as SciSpline
 
 from repro.core.spline import (
