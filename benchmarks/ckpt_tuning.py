@@ -19,13 +19,13 @@ def _tree(mb: float = 96.0, n_arrays: int = 24, seed: int = 0):
             for i in range(n_arrays)}
 
 
-def run() -> dict:
-    tree = _tree()
+def run(smoke: bool = False) -> dict:
+    tree = _tree(mb=24.0, n_arrays=12) if smoke else _tree()
     with tempfile.TemporaryDirectory() as d:
         log = os.path.join(d, "transfers.jsonl")
         tuner = CheckpointTuner(log)
         probes = tuner.seed_history(tree, os.path.join(d, "seed"),
-                                    n_probes=16)
+                                    n_probes=8 if smoke else 16)
         tuner.fit()
         rec = tuner.recommend()
         # validate: measure the recommendation + a naive default
@@ -43,8 +43,8 @@ def run() -> dict:
     }
 
 
-def main():
-    out = run()
+def main(smoke: bool = False):
+    out = run(smoke)
     print(f"ckpt_tuning_recommended,0,cc/p/pp={out['recommended']} "
           f"{out['recommended_mbps']:.0f}Mbps")
     print(f"ckpt_tuning_speedup,0,{out['speedup_vs_naive']:.2f}x vs cc=p=pp=1 "

@@ -3,11 +3,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import TransferTuner, TunerConfig
 from repro.core.baselines import ALL_BASELINES, run_transfer
-from repro.netsim import generate_history, make_testbed, ParamBounds
+from repro.netsim import generate_history, make_testbed
 
 
 def build_world(testbed: str, *, days: float = 14.0, per_day: int = 200,

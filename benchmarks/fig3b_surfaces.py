@@ -2,15 +2,14 @@
 cubic regression vs piecewise cubic spline) on held-out log entries."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.surfaces import fit_poly_surface, fit_surface, surface_accuracy
 from repro.netsim import ParamBounds, generate_history, make_testbed
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     env = make_testbed("xsede", seed=3)
-    hist = generate_history(env, days=14, transfers_per_day=220, seed=0)
+    days, per_day = (5, 120) if smoke else (14, 220)
+    hist = generate_history(env, days=days, transfers_per_day=per_day, seed=0)
     # hold out every other entry; fit on large-file class for a clean surface
     sel = [e for e in hist if e.avg_file_mb > 500]
     train, test = sel[::2], sel[1::2]
@@ -25,8 +24,8 @@ def run() -> dict:
     return out
 
 
-def main():
-    out = run()
+def main(smoke: bool = False):
+    out = run(smoke)
     for k, v in out.items():
         print(f"fig3b_{k},0,{v:.1f}% accuracy")
     assert out["piecewise_cubic_spline"] >= out["quadratic"], \

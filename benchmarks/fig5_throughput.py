@@ -16,12 +16,18 @@ PERIODS = {"offpeak": 4 * 3600.0,
                     "didclab-xsede": 15 * 3600.0}}
 
 
-def run(repeats: int = 4) -> dict:
+def run(repeats: int = 4, smoke: bool = False) -> dict:
     import dataclasses
 
+    if smoke:
+        repeats = 1
     table: dict = {}
     for tb in TESTBEDS:
-        hist, asm, baselines = build_world(tb, seed=0)
+        if smoke:
+            hist, asm, baselines = build_world(tb, days=4.0, per_day=100,
+                                               seed=0)
+        else:
+            hist, asm, baselines = build_world(tb, seed=0)
         for fclass in CLASSES:
             for period, when in PERIODS.items():
                 t0 = when if isinstance(when, float) else when[tb]
@@ -43,8 +49,8 @@ def run(repeats: int = 4) -> dict:
     return table
 
 
-def main():
-    table = run()
+def main(smoke: bool = False):
+    table = run(smoke=smoke)
     wins = 0
     cells = 0
     norm_scores = {m: [] for m in MODELS}

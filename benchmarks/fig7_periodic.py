@@ -8,15 +8,18 @@ from repro.core import TransferTuner, TunerConfig
 from repro.netsim import generate_history, make_dataset, make_testbed
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     env = make_testbed("xsede", seed=3)
-    base = generate_history(env, days=10, transfers_per_day=180, seed=0)
+    base_days, per_day = (4, 100) if smoke else (10, 180)
+    stream_days = 4 if smoke else 10
+    base = generate_history(env, days=base_days, transfers_per_day=per_day,
+                            seed=0)
     out = {}
-    for period_days in (1, 3, 5, 10):
+    for period_days in (1, 3) if smoke else (1, 3, 5, 10):
         tuner = TransferTuner(TunerConfig(seed=0)).fit(base)
-        # stream 10 more days; refresh the DB every `period_days`
+        # stream more days; refresh the DB every `period_days`
         accs = []
-        for day in range(10, 20):
+        for day in range(10, 10 + stream_days):
             fresh = generate_history(make_testbed("xsede", seed=50 + day),
                                      days=1, transfers_per_day=120,
                                      seed=100 + day)
@@ -32,8 +35,8 @@ def run() -> dict:
     return out
 
 
-def main():
-    out = run()
+def main(smoke: bool = False):
+    out = run(smoke)
     for period, acc in sorted(out.items()):
         print(f"fig7_period_{period}d,0,{acc:.1f}% accuracy")
     return out

@@ -10,47 +10,49 @@ from benchmarks.common import csv_row, timed
 from repro.kernels import ref
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     rows = []
+    S = 256 if smoke else 1024
 
-    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
-    v = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(1, S, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, 2, 64)), jnp.float32)
     f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
     jax.block_until_ready(f(q, k, v))
     _, us = timed(lambda: jax.block_until_ready(f(q, k, v)))
-    flops = 2 * 2 * 1024 * 1024 * 8 * 64
-    rows.append(("attention_ref_1k", us, f"{flops / us * 1e-3:.1f}GFLOP/s"))
+    flops = 2 * 2 * S * S * 8 * 64
+    rows.append((f"attention_ref_{S}", us, f"{flops / us * 1e-3:.1f}GFLOP/s"))
 
     fb = jax.jit(lambda q, k, v: ref.attention_blocked(q, k, v, bq=256,
                                                        bk=256))
     jax.block_until_ready(fb(q, k, v))
     _, us = timed(lambda: jax.block_until_ready(fb(q, k, v)))
-    rows.append(("attention_blocked_1k", us, f"{flops / us * 1e-3:.1f}GFLOP/s"))
+    rows.append((f"attention_blocked_{S}", us,
+                 f"{flops / us * 1e-3:.1f}GFLOP/s"))
 
-    x = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
-    dt = jnp.asarray(rng.uniform(0.01, 0.2, (2, 1024, 8)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, S, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (2, S, 8)), jnp.float32)
     A = jnp.asarray(-rng.uniform(0.5, 2, 8), jnp.float32)
-    Bm = jnp.asarray(rng.normal(size=(2, 1024, 64)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(2, S, 64)), jnp.float32)
     fs = jax.jit(lambda x, dt, Bm: ref.ssd_chunked_ref(x, dt, A, Bm, Bm,
                                                        chunk=128))
     jax.block_until_ready(fs(x, dt, Bm))
     _, us = timed(lambda: jax.block_until_ready(fs(x, dt, Bm)))
-    rows.append(("ssd_chunked_1k", us, "mamba2 scan 2x1024xH8P64N64"))
+    rows.append((f"ssd_chunked_{S}", us, f"mamba2 scan 2x{S}xH8P64N64"))
 
-    r = jnp.asarray(rng.normal(size=(2, 512, 4, 64)), jnp.float32)
-    w = jnp.asarray(-rng.uniform(0.01, 3, (2, 512, 4, 64)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(2, S // 2, 4, 64)), jnp.float32)
+    w = jnp.asarray(-rng.uniform(0.01, 3, (2, S // 2, 4, 64)), jnp.float32)
     u = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
     fr = jax.jit(lambda r, w: ref.rwkv6_chunked_ref(r, r, r, w, u, chunk=16))
     jax.block_until_ready(fr(r, w))
     _, us = timed(lambda: jax.block_until_ready(fr(r, w)))
-    rows.append(("rwkv6_chunked_512", us, "finch wkv 2x512xH4K64"))
+    rows.append((f"rwkv6_chunked_{S // 2}", us, f"finch wkv 2x{S // 2}xH4K64"))
     return rows
 
 
-def main():
-    for name, us, derived in run():
+def main(smoke: bool = False):
+    for name, us, derived in run(smoke):
         csv_row(name, us, derived)
 
 

@@ -12,8 +12,13 @@ from repro.netsim import make_dataset, make_testbed
 MODELS = ["SC", "ANN+OT", "NMT", "HARP", "ASM"]
 
 
-def run(repeats: int = 4) -> dict:
-    hist, asm, baselines = build_world("xsede", seed=0)
+def run(repeats: int = 4, smoke: bool = False) -> dict:
+    if smoke:
+        repeats = 2
+        hist, asm, baselines = build_world("xsede", days=4.0, per_day=100,
+                                           seed=0)
+    else:
+        hist, asm, baselines = build_world("xsede", seed=0)
     out = {}
     for name in MODELS:
         n_samples, changes, decision_us = [], [], []
@@ -34,8 +39,8 @@ def run(repeats: int = 4) -> dict:
     return out
 
 
-def main():
-    out = run()
+def main(smoke: bool = False):
+    out = run(smoke=smoke)
     for name, row in out.items():
         print(f"tab_convergence_{name},{row['host_us']:.0f},"
               f"samples={row['samples']:.1f} changes={row['param_changes']:.1f}")

@@ -1,0 +1,52 @@
+"""Fleet mode: many concurrent tuned transfers sharing one link.
+
+Fits the offline knowledge base once, then runs an 8-tenant fleet over the
+XSEDE testbed twice — naive all-at-once admission vs the contention-aware
+admission controller — and prints the roll-up each produces.
+
+    PYTHONPATH=src python examples/fleet.py
+"""
+
+from repro.core import (
+    FleetConfig,
+    FleetRequest,
+    FleetScheduler,
+    TransferTuner,
+    TunerConfig,
+)
+from repro.netsim import generate_history, make_dataset, make_testbed
+
+N = 8
+
+env = make_testbed("xsede", seed=3)
+hist = generate_history(env, days=6, transfers_per_day=150, seed=0)
+db = TransferTuner(TunerConfig(seed=0)).fit(hist).db
+
+requests = [
+    FleetRequest(
+        dataset=make_dataset(["small", "medium", "large"][i % 3], 30 + i),
+        env_seed=500 + i,
+        start_clock_s=4 * 3600.0,
+        constant_load=0.15,
+    )
+    for i in range(N)
+]
+
+print(f"=== {N}-tenant fleet on xsede (shared 10 Gbps link) ===")
+for label, config in [
+    ("naive (admit all at once)", FleetConfig(max_concurrent=N)),
+    ("contention-aware admission", FleetConfig()),
+]:
+    fleet = FleetScheduler(db, config=config).run(list(requests))
+    print(
+        f"  {label:28s} cap={fleet.admitted_concurrency} "
+        f"goodput={fleet.goodput_mbps:,.0f} Mbps "
+        f"makespan={fleet.makespan_s:,.0f} s"
+    )
+    print(
+        f"  {'':28s} samples p50/p99={fleet.samples_p50:.0f}/"
+        f"{fleet.samples_p99:.0f} "
+        f"accuracy vs single-tenant opt={fleet.accuracy_vs_single:.1f}% "
+        f"re-probes={fleet.reprobe_grants} "
+        f"(+{fleet.reprobe_denials} storm-damped)"
+    )

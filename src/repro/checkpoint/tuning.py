@@ -8,11 +8,8 @@ the paper on genuine hardware (the disk/page-cache path stands in for the
 WAN)."""
 from __future__ import annotations
 
-import dataclasses
 import json
-import os
 
-import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import CkptParams, save_checkpoint

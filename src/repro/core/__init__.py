@@ -11,6 +11,10 @@ from repro.core.regions import identify_sampling_regions, SamplingRegion
 from repro.core.offline import OfflineDB, offline_analysis
 from repro.core.online import AdaptiveSampler, TransferReport
 from repro.core.tuner import TransferTuner, TunerConfig
+from repro.core.batched import SurfaceStack
+from repro.core.fleet import (
+    FleetConfig, FleetReport, FleetRequest, FleetScheduler, ReprobeLimiter,
+)
 
 __all__ = [
     "CubicSpline1D", "BicubicSpline", "TricubicSurface", "PolySurface",
@@ -18,5 +22,7 @@ __all__ = [
     "intensity_bins", "ThroughputSurface", "fit_surface", "surface_accuracy",
     "find_local_maxima", "integer_argmax", "identify_sampling_regions",
     "SamplingRegion", "OfflineDB", "offline_analysis", "AdaptiveSampler",
-    "TransferReport", "TransferTuner", "TunerConfig",
+    "TransferReport", "TransferTuner", "TunerConfig", "SurfaceStack",
+    "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
+    "ReprobeLimiter",
 ]

@@ -1,0 +1,151 @@
+"""Batched (vmapped) surface evaluation for fleet-scale online tuning.
+
+The online phase only ever queries surfaces on the integer protocol lattice
+Psi = {1..beta}^3 (Sec. 3.1.2): discriminative probes, surface argmaxima, and
+candidate jump targets are all integer ``TransferParams``.  Each fitted spline
+surface is therefore losslessly represented by its dense integer-lattice
+tensor, and a cluster's surfaces stack into one ``(S, P, C, Q)`` array.  Every
+scalar operation of ``core.online`` (predict, confidence test, closest-surface
+search, argmax over candidate points) then becomes a gather/``jnp.einsum``
+over the stack, ``jax.vmap``-ed over a batch of concurrent requests — one call
+scores B requests x S surfaces x P candidate points at once.
+
+The argmax-over-candidates hot path dispatches through
+``repro.kernels.ops.transfer_predict_argmax`` (XLA gather by default, the
+Pallas one-hot-matmul kernel in ``kernels.transfer_select`` on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.surfaces import ThroughputSurface
+from repro.netsim.environment import ParamBounds
+
+
+def _predict_one(flat_values: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Score one request's candidate set: (S, G), (P,) -> (S, P)."""
+    return jnp.take(flat_values, idx, axis=1)
+
+
+# (S, G), (B, P) -> (B, S, P): every request x surface x candidate at once.
+_predict_many = jax.jit(jax.vmap(_predict_one, in_axes=(None, 0)))
+
+
+@jax.jit
+def _predict_points(flat_values: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Score scattered points: (S, G), (...,) -> (..., S)."""
+    out = jnp.take(flat_values, idx.reshape(-1), axis=1)  # (S, K)
+    return jnp.moveaxis(out, 0, 1).reshape(*idx.shape, flat_values.shape[0])
+
+
+@jax.jit
+def closest_surface_index(
+    preds: jnp.ndarray, achieved: jnp.ndarray, direction: jnp.ndarray
+) -> jnp.ndarray:
+    """Vectorized FindClosestSurface over a batch of probes.
+
+    ``preds`` (B, S) are the surface predictions at each request's probe
+    point, surfaces sorted ascending by load intensity; ``achieved`` (B,) the
+    observed rates; ``direction`` (B,) int with -1 = lighter-load candidates
+    only (predict <= achieved), +1 = heavier (predict >= achieved), 0 =
+    unrestricted.  Mirrors ``core.online._closest_surface`` exactly, including
+    the fall-back-to-all-surfaces branch when the direction filter empties the
+    candidate set and the lowest-load tie-break of ``min``.
+    """
+    d = direction[:, None]
+    a = achieved[:, None]
+    mask = jnp.where(d < 0, preds <= a, jnp.where(d > 0, preds >= a, True))
+    mask = mask | ~mask.any(axis=1, keepdims=True)
+    dist = jnp.where(mask, jnp.abs(preds - a), jnp.inf)
+    return jnp.argmin(dist, axis=1)
+
+
+@jax.jit
+def within_band(
+    preds: jnp.ndarray, sigma: jnp.ndarray, achieved: jnp.ndarray, z: float
+) -> jnp.ndarray:
+    """Gaussian confidence-band test for B probes x S surfaces -> (B, S)."""
+    return jnp.abs(achieved[:, None] - preds) <= z * sigma[None, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class SurfaceStack:
+    """A cluster's surfaces stacked for batched evaluation.
+
+    ``values[s, p - 1, cc - 1, pp - 1]`` is surface s evaluated at the integer
+    point (p, cc, pp); surfaces are sorted ascending by load intensity so
+    vectorized argmins tie-break exactly like the scalar path.
+    """
+
+    values: jnp.ndarray  # (S, P, C, Q) integer-lattice spline values
+    sigma: jnp.ndarray  # (S,) confidence-band sigmas
+    load: jnp.ndarray  # (S,) load-intensity tags, ascending
+    argmax_pts: np.ndarray  # (S, 3) int32 (cc, p, pp) precomputed argmaxima
+    max_throughput: np.ndarray  # (S,) precomputed maxima
+
+    @classmethod
+    def from_surfaces(
+        cls, surfaces: list[ThroughputSurface], bounds: ParamBounds
+    ) -> "SurfaceStack":
+        surfaces = sorted(surfaces, key=lambda s: s.load_intensity)
+        axes = (
+            np.arange(1.0, bounds.max_p + 1.0),
+            np.arange(1.0, bounds.max_cc + 1.0),
+            np.arange(1.0, bounds.max_pp + 1.0),
+        )
+        vals = np.stack([s.surface.dense_eval(*axes) for s in surfaces])
+        return cls(
+            values=jnp.asarray(vals, jnp.float32),
+            sigma=jnp.asarray([s.sigma for s in surfaces], jnp.float32),
+            load=jnp.asarray([s.load_intensity for s in surfaces], jnp.float32),
+            argmax_pts=np.array(
+                [s.argmax_params.as_tuple() for s in surfaces], np.int32
+            ),
+            max_throughput=np.array([s.max_throughput for s in surfaces]),
+        )
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_surfaces(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def flat_values(self) -> jnp.ndarray:
+        return self.values.reshape(self.values.shape[0], -1)
+
+    def flat_index(self, pts) -> jnp.ndarray:
+        """(cc, p, pp) integer points (..., 3) -> flat grid indices (...,)."""
+        pts = jnp.asarray(pts, jnp.int32)
+        n_cc, n_pp = self.values.shape[2], self.values.shape[3]
+        cc, p, pp = pts[..., 0] - 1, pts[..., 1] - 1, pts[..., 2] - 1
+        return (p * n_cc + cc) * n_pp + pp
+
+    def predict(self, pts) -> jnp.ndarray:
+        """Predict at integer points (..., 3) in (cc, p, pp) order -> (..., S).
+
+        Exact (not interpolated): the lattice holds the spline's own values,
+        and online queries never leave the lattice.
+        """
+        return _predict_points(self.flat_values, self.flat_index(pts))
+
+    def predict_candidates(self, pts) -> jnp.ndarray:
+        """Per-request candidate scoring: (B, P, 3) -> (B, S, P), vmapped."""
+        return _predict_many(self.flat_values, self.flat_index(pts))
+
+    def best_candidates(
+        self, pts, *, use_pallas: bool = False
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Best candidate per (request, surface): (B, P, 3) -> two (B, S).
+
+        Returns (best value, candidate index); dispatches to the Pallas
+        one-hot-matmul kernel when ``use_pallas`` is set.
+        """
+        from repro.kernels.ops import transfer_predict_argmax
+
+        idx = self.flat_index(pts)
+        return transfer_predict_argmax(self.flat_values, idx, use_pallas=use_pallas)

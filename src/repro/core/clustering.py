@@ -76,7 +76,8 @@ def hac_upgma(X: np.ndarray, m: int) -> np.ndarray:
         centroid[nxt] = ca
         size[nxt] = size[a] + size[b]
         members[nxt] = members[a] + members[b]
-        active.remove(a); active.remove(b)
+        active.remove(a)
+        active.remove(b)
         if nxt >= D.shape[0]:
             D = np.pad(D, ((0, n), (0, n)), constant_values=np.inf)
         for o in active:

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.clustering import ClusterModel, fit_clusters
 from repro.core.contention import (
-    intensity_bins, load_intensity, residual_intensity_bins,
+    load_intensity, residual_intensity_bins,
 )
 from repro.core.regions import SamplingRegion, identify_sampling_regions
 from repro.core.surfaces import ThroughputSurface, fit_surface
@@ -36,9 +36,22 @@ class ClusterKnowledge:
     region: SamplingRegion
     entries: list[LogEntry]                # raw store for additive refits
     dirty: bool = False
+    _stack: object = dataclasses.field(default=None, repr=False, compare=False)
 
     def sorted_by_load(self) -> list[ThroughputSurface]:
         return sorted(self.surfaces, key=lambda s: s.load_intensity)
+
+    def surface_stack(self, bounds: ParamBounds):
+        """Lazily-built batched view of this cluster's surfaces (fleet path).
+
+        Cached per ``bounds``; invalidated whenever :meth:`OfflineDB.update`
+        refits this cluster.
+        """
+        if self._stack is None or self._stack[0] != bounds:
+            from repro.core.batched import SurfaceStack
+            self._stack = (bounds, SurfaceStack.from_surfaces(self.surfaces,
+                                                              bounds))
+        return self._stack[1]
 
 
 @dataclasses.dataclass
@@ -69,6 +82,7 @@ class OfflineDB:
                                                 self.bounds)
             ck.region = identify_sampling_regions(ck.surfaces, self.bounds)
             ck.dirty = False
+            ck._stack = None           # stale batched view; rebuilt lazily
 
 
 def _fit_cluster_surfaces(entries: list[LogEntry], n_load_bins: int,

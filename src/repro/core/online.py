@@ -100,19 +100,28 @@ def _closest_surface(surfaces: list[ThroughputSurface], prm: TransferParams,
 
 
 class AdaptiveSampler:
-    """The paper's Adaptive Sampling Module (ASM)."""
+    """The paper's Adaptive Sampling Module (ASM).
+
+    ``reprobe_gate`` is an optional callable ``(now_s) -> bool`` consulted
+    before a mid-transfer re-parameterization; the fleet scheduler passes a
+    shared rate limiter here so a capacity drop does not trigger a fleet-wide
+    re-probe storm.  ``None`` (single-tenant) preserves the original
+    behaviour exactly.
+    """
 
     def __init__(self, db: OfflineDB, *, z: float = 2.0, max_samples: int = 3,
-                 bulk_chunks: int = 8):
+                 bulk_chunks: int = 8, reprobe_gate=None):
         self.db = db
         self.z = z
         self.max_samples = max_samples
         self.bulk_chunks = bulk_chunks
+        self.reprobe_gate = reprobe_gate
 
     # ------------------------------------------------------------------ #
     def converge(self, env: Environment, dataset: Dataset,
                  cluster: ClusterKnowledge,
-                 records: list[SampleRecord]) -> ThroughputSurface:
+                 records: list[SampleRecord],
+                 probe_mb: float | None = None) -> ThroughputSurface:
         """Probe phase: locate the surface matching current external load.
 
         Sample 1 goes to the most *discriminative* point of the precomputed
@@ -123,7 +132,9 @@ class AdaptiveSampler:
         closest surface on a miss (discarding half the stack each time).
         """
         surfaces = cluster.sorted_by_load()
-        probe_mb = dataset.sample_chunks(self.bulk_chunks + self.max_samples)[0]
+        if probe_mb is None:
+            probe_mb = dataset.sample_chunks(
+                self.bulk_chunks + self.max_samples)[0]
         cur = surfaces[len(surfaces) // 2]          # median load intensity
         remaining = list(surfaces)
         budget = self.max_samples
@@ -173,13 +184,12 @@ class AdaptiveSampler:
         cluster = self.db.query(features)
         records: list[SampleRecord] = []
         t0 = env.clock_s
-        surface = self.converge(env, dataset, cluster, records)
+        probe_mb = dataset.sample_chunks(self.bulk_chunks + self.max_samples)[0]
+        surface = self.converge(env, dataset, cluster, records, probe_mb)
         params = surface.argmax_params
-        param_changes = len({r.params.as_tuple() for r in records})
 
         # bulk phase: chunked transfer with drift detection
-        sampled_mb = len(records) * dataset.sample_chunks(
-            self.bulk_chunks + self.max_samples)[0]
+        sampled_mb = len(records) * probe_mb
         remaining = max(dataset.total_mb - sampled_mb, 0.0)
         chunk_mb = remaining / self.bulk_chunks
         surfaces = cluster.sorted_by_load()
@@ -199,27 +209,53 @@ class AdaptiveSampler:
                 # respawn + slow start (Sec. 3.2: changes are expensive).
                 strikes += 1
                 if strikes >= 2:
+                    if (self.reprobe_gate is not None
+                            and not self.reprobe_gate(env.clock_s)):
+                        continue  # denied: keep strikes, retry on next miss
                     surface = _closest_surface(
                         surfaces, params, achieved,
                         lighter=surface.above_band(params, achieved, self.z))
                     if surface.argmax_params.as_tuple() != params.as_tuple():
                         params = surface.argmax_params
-                        param_changes += 1
                     strikes = 0
             else:
                 strikes = 0
         total_s = env.clock_s - t0
         achieved_total = dataset.total_mb * 8.0 / max(total_s, 1e-9)
+        # Parameter changes = actual session switches the protocol paid for
+        # (initial spawn + every consecutive-record parameter transition),
+        # not distinct tuples — a probe revisiting an earlier tuple is a new
+        # switch, and a discriminative probe colliding with the argmax is not.
+        param_changes = _count_param_switches(records)
         return TransferReport(params, achieved_total, records,
                               n_samples=sum(r.was_sample for r in records),
                               total_s=total_s, param_changes=param_changes)
 
 
-def _request_features(env: Environment, dataset: Dataset):
+def _count_param_switches(records: list[SampleRecord]) -> int:
+    """Number of parameter switches a session actually paid setup cost for:
+    one for the initial spawn plus one per consecutive-record transition."""
+    if not records:
+        return 0
+    return 1 + sum(a.params.as_tuple() != b.params.as_tuple()
+                   for a, b in zip(records, records[1:]))
+
+
+def request_features(link, dataset: Dataset):
+    """Cluster-query feature vector of a transfer request (link + dataset).
+
+    The single canonical definition — the fleet admission path reuses it, so
+    online queries and fleet demand prediction can never disagree on cluster
+    routing.
+    """
     import numpy as np
     return np.array([
-        np.log10(env.link.bandwidth_mbps),
-        np.log10(max(env.link.rtt_s, 1e-5)),
+        np.log10(link.bandwidth_mbps),
+        np.log10(max(link.rtt_s, 1e-5)),
         np.log10(dataset.avg_file_mb),
         np.log10(dataset.n_files),
     ])
+
+
+def _request_features(env: Environment, dataset: Dataset):
+    return request_features(env.link, dataset)

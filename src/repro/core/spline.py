@@ -13,7 +13,6 @@ and Hessians for the Sec. 3.1.2 second-partial-derivative test come from
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -98,7 +97,8 @@ def nat_spline_coeffs(x: np.ndarray, Y: np.ndarray) -> np.ndarray:
     Returns (R, N-1, 4) local coefficients a + b t + c t^2 + d t^3.
     One shared (N, N) solve serves all R rows.
     """
-    x = np.asarray(x, np.float64); Y = np.atleast_2d(np.asarray(Y, np.float64))
+    x = np.asarray(x, np.float64)
+    Y = np.atleast_2d(np.asarray(Y, np.float64))
     R, n = Y.shape
     if n == 1:
         return np.concatenate([Y[:, :, None],
@@ -106,7 +106,8 @@ def nat_spline_coeffs(x: np.ndarray, Y: np.ndarray) -> np.ndarray:
     if n == 2:
         slope = (Y[:, 1] - Y[:, 0]) / (x[1] - x[0])
         out = np.zeros((R, 1, 4))
-        out[:, 0, 0] = Y[:, 0]; out[:, 0, 1] = slope
+        out[:, 0, 0] = Y[:, 0]
+        out[:, 0, 1] = slope
         return out
     h = np.diff(x)
     A = np.zeros((n, n))
@@ -169,7 +170,9 @@ class BicubicSpline:
 
     @classmethod
     def fit(cls, gx, gy, z) -> "BicubicSpline":
-        gx = jnp.asarray(gx); gy = jnp.asarray(gy); z = jnp.asarray(z)
+        gx = jnp.asarray(gx)
+        gy = jnp.asarray(gy)
+        z = jnp.asarray(z)
         assert z.shape == (gx.shape[0], gy.shape[0])
         if gy.shape[0] >= 2:
             _, rc = _fit_many(gy, z)
@@ -208,8 +211,10 @@ class TricubicSurface:
 
     @classmethod
     def fit(cls, gp, gcc, gpp, grid) -> "TricubicSurface":
-        gp = np.asarray(gp, np.float64); gcc = np.asarray(gcc, np.float64)
-        gpp = np.asarray(gpp, np.float64); grid = np.asarray(grid, np.float64)
+        gp = np.asarray(gp, np.float64)
+        gcc = np.asarray(gcc, np.float64)
+        gpp = np.asarray(gpp, np.float64)
+        grid = np.asarray(grid, np.float64)
         ppc = nat_spline_coeffs(gpp, grid.reshape(-1, gpp.shape[0]))
         return cls(gp, gcc, gpp, grid, ppc)
 
@@ -247,7 +252,8 @@ class TricubicSurface:
     def dense_eval(self, pq: np.ndarray, ccq: np.ndarray,
                    ppq: np.ndarray) -> np.ndarray:
         """Tensor evaluation -> (len(pq), len(ccq), len(ppq))."""
-        pq = np.asarray(pq, np.float64); ccq = np.asarray(ccq, np.float64)
+        pq = np.asarray(pq, np.float64)
+        ccq = np.asarray(ccq, np.float64)
         ppq = np.asarray(ppq, np.float64)
         out = np.empty((len(pq), len(ccq), len(ppq)))
         for k, pp in enumerate(ppq):
@@ -268,20 +274,24 @@ class TricubicSurface:
         pts = [x]
         for i in range(3):
             for s in (+1, -1):
-                e = np.zeros(3); e[i] = s * h
+                e = np.zeros(3)
+                e[i] = s * h
                 pts.append(x + e)
         for i in range(3):
             for j in range(i + 1, 3):
                 for si in (+1, -1):
                     for sj in (+1, -1):
-                        e = np.zeros(3); e[i] = si * h; e[j] = sj * h
+                        e = np.zeros(3)
+                        e[i] = si * h
+                        e[j] = sj * h
                         pts.append(x + e)
         vals = self.batch_eval(np.stack(pts))
         f0 = vals[0]
         H = np.zeros((3, 3))
         k = 1
         for i in range(3):
-            fp, fm = vals[k], vals[k + 1]; k += 2
+            fp, fm = vals[k], vals[k + 1]
+            k += 2
             H[i, i] = (fp - 2 * f0 + fm) / h ** 2
         for i in range(3):
             for j in range(i + 1, 3):

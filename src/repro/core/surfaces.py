@@ -83,7 +83,9 @@ def _aggregate_grid(entries: list[LogEntry]
         pts[:, dim] = np.where(np.abs(g[i] - pts[:, dim])
                                <= np.abs(pts[:, dim] - g[j]), g[i], g[j])
     shape = (len(gp), len(gcc), len(gpp))
-    s = np.zeros(shape); s2 = np.zeros(shape); cnt = np.zeros(shape)
+    s = np.zeros(shape)
+    s2 = np.zeros(shape)
+    cnt = np.zeros(shape)
     ip = np.searchsorted(gp, pts[:, 0])
     ic = np.searchsorted(gcc, pts[:, 1])
     iq = np.searchsorted(gpp, pts[:, 2])
@@ -107,7 +109,8 @@ def _aggregate_grid(entries: list[LogEntry]
         d = np.sqrt((((nodes[missing][:, None] - pts[None]) / scale) ** 2).sum(-1))
         w = 1.0 / (d + 1e-3) ** 2
         fill = (w * th[None]).sum(-1) / w.sum(-1)
-        flat = mean.ravel(); flat[missing] = fill
+        flat = mean.ravel()
+        flat[missing] = fill
         mean = flat.reshape(shape)
 
     # Empirical-Bayes shrinkage toward the local neighbourhood: nodes backed

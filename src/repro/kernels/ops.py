@@ -68,6 +68,20 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, initial_state=None,
                                return_state=return_state)
 
 
+def transfer_predict_argmax(values, idx, *, use_pallas: bool = False,
+                            interpret: bool = False):
+    """Best candidate per (request, surface) over stacked surface grids.
+
+    values: (S, G) flattened integer-lattice surface values; idx: (B, P) flat
+    candidate indices.  Returns (best (B, S), argk (B, S)) — the fleet
+    tuner's batched predict/argmax (see ``core.batched``).
+    """
+    if use_pallas:
+        from repro.kernels.transfer_select import batched_predict_argmax_pallas
+        return batched_predict_argmax_pallas(values, idx, interpret=interpret)
+    return ref.batched_predict_argmax_ref(values, idx)
+
+
 def rwkv6_scan(r, k, v, w, u, *, chunk: int = 16, initial_state=None,
                return_state: bool = False, use_pallas: bool = False):
     """RWKV6 WKV over a sequence."""

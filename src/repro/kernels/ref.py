@@ -302,6 +302,27 @@ def rwkv6_sequential_ref(r, k, v, w, u, initial_state=None):
     return jnp.stack(ys, axis=1), state
 
 
+# --------------------------------------------------------------------- #
+# batched transfer-surface selection (fleet tuner)
+# --------------------------------------------------------------------- #
+def batched_predict_argmax_ref(values, idx):
+    """Score candidate points on stacked surface grids and pick the best.
+
+    values: (S, G) flattened integer-lattice surface values; idx: (B, P)
+    flat candidate indices.  Returns (best (B, S) f32, argk (B, S) int32):
+    the best candidate's value and its position in the candidate list, for
+    every request x surface pair.  Oracle for the Pallas one-hot-matmul
+    kernel in ``kernels.transfer_select``.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    idx = jnp.asarray(idx, jnp.int32)
+    S = values.shape[0]
+    B, P = idx.shape
+    scores = jnp.take(values, idx.reshape(-1), axis=1).reshape(S, B, P)
+    scores = jnp.moveaxis(scores, 0, 1)                  # (B, S, P)
+    return jnp.max(scores, axis=-1), jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
 def ssd_sequential_ref(x, dt, A, Bmat, Cmat, initial_state=None):
     """Token-by-token SSD oracle used to validate the chunked form."""
     Bsz, L, H, P = x.shape

@@ -15,14 +15,12 @@ real buffers — inputs are ShapeDtypeStructs and parameters come from
 abstract init.
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import all_archs, get_config
 from repro.dist.sharding import (ShardingReport, batch_sharding,
@@ -103,9 +101,6 @@ def run_cost_cell(arch: str, shape_name: str, *, verbose: bool = True) -> dict:
         b0, b1 = meas[0]["bytes_accessed"], meas[1]["bytes_accessed"]
         c0, c1 = (meas[0]["collective_bytes_total"],
                   meas[1]["collective_bytes_total"])
-        unit0 = depths[0] / (depths[1] - depths[0])   # units in first meas
-        if cfg0.hybrid_attn_every:
-            unit0 = 1.0
         slope_f, slope_b, slope_c = f1 - f0, b1 - b0, c1 - c0
         extra = n_units - (1.0 if cfg0.hybrid_attn_every else depths[0]) \
             if not cfg0.first_k_dense else n_units - 1

@@ -10,7 +10,6 @@ exercised by launch/dryrun.py).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 
 import jax

@@ -200,7 +200,6 @@ def mla_decode(p, x, cfg: ModelConfig, positions, cache):
     space, attention runs against the latent cache directly, and the value
     up-projection is applied to the attended latent."""
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
-    kvr = cfg.kv_lora_rank
     q = jnp.einsum("bsd,dr,rhk->bshk", x, p["wq_a"], p["wq_b"])
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)

@@ -396,7 +396,6 @@ class Model:
 
         if cfg.family in ("ssm", "hybrid"):
             k_every = cfg.hybrid_attn_every
-            shared_caches = []
             # scan mamba layers; shared attention handled per group
             if k_every:
                 # unrolled by groups to interleave the shared block

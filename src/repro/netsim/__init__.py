@@ -9,17 +9,19 @@ testbeds.  Every tuner (ours + the six baselines) runs against the same
 environment through the same narrow ``Environment.transfer()`` API, so none of
 them can cheat.
 """
-from repro.netsim.environment import Environment, TransferParams, ParamBounds
+from repro.netsim.environment import (
+    Environment, TransferParams, ParamBounds, SharedLink, TenantEnvironment,
+)
 from repro.netsim.testbeds import (
     make_testbed, XSEDE, DIDCLAB, DIDCLAB_XSEDE, TESTBEDS,
 )
 from repro.netsim.workload import Dataset, make_dataset, FILE_CLASSES
-from repro.netsim.traffic import DiurnalTraffic
+from repro.netsim.traffic import DiurnalTraffic, StepTraffic
 from repro.netsim.loggen import generate_history, LogEntry
 
 __all__ = [
-    "Environment", "TransferParams", "ParamBounds", "make_testbed",
-    "XSEDE", "DIDCLAB", "DIDCLAB_XSEDE", "TESTBEDS", "Dataset",
-    "make_dataset", "FILE_CLASSES", "DiurnalTraffic", "generate_history",
-    "LogEntry",
+    "Environment", "TransferParams", "ParamBounds", "SharedLink",
+    "TenantEnvironment", "make_testbed", "XSEDE", "DIDCLAB", "DIDCLAB_XSEDE",
+    "TESTBEDS", "Dataset", "make_dataset", "FILE_CLASSES", "DiurnalTraffic",
+    "StepTraffic", "generate_history", "LogEntry",
 ]

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+import threading
 
 import numpy as np
 
@@ -113,7 +113,8 @@ class Environment:
     # ------------------------------------------------------------------ #
     def mean_throughput(self, params: TransferParams, avg_file_mb: float,
                         n_files: int, ext_load: float,
-                        contending_mbps: float = 0.0) -> float:
+                        contending_mbps: float = 0.0,
+                        n_contending: int = 0) -> float:
         """Noise-free expected throughput (Mbit/s) for a parameter choice."""
         link = self.link
         cc, p, pp = params.cc, params.p, params.pp
@@ -127,7 +128,13 @@ class Environment:
         per_stream = min(window_cap, loss_cap)
 
         # Available capacity after diurnal external load and logged contenders.
-        avail = link.bandwidth_mbps * (1.0 - ext_load) - contending_mbps
+        # TCP fair share puts a floor under the subtraction: with k active
+        # contending flows, this flow still gets ~1/(k+1) of the post-load
+        # capacity no matter how aggressively the others are pushing.
+        post_load = link.bandwidth_mbps * (1.0 - ext_load)
+        avail = post_load - contending_mbps
+        if n_contending > 0:
+            avail = max(avail, post_load / (1.0 + n_contending))
         avail = max(avail, 0.05 * link.bandwidth_mbps)
 
         # Server-process scheduling gain: a single GridFTP process cannot keep
@@ -183,6 +190,16 @@ class Environment:
         self.clock_s += float(seconds)
 
     # ------------------------------------------------------------------ #
+    # contention hooks (overridden by TenantEnvironment for shared links)
+    # ------------------------------------------------------------------ #
+    def _contention(self) -> tuple[float, int]:
+        """(aggregate contending rate Mbit/s, number of contending flows)."""
+        return 0.0, 0
+
+    def _register_flow(self, rate_mbps: float, end_s: float) -> None:
+        """Publish this transfer's rate so concurrent flows can see it."""
+
+    # ------------------------------------------------------------------ #
     # tuner-facing API
     # ------------------------------------------------------------------ #
     def transfer(self, params: TransferParams, size_mb: float,
@@ -197,7 +214,10 @@ class Environment:
         rate carries Gaussian measurement noise (Sec. 3.1.1).
         """
         load = self.current_load()
-        mean = self.mean_throughput(params, avg_file_mb, n_files, load)
+        contending, n_active = self._contention()
+        mean = self.mean_throughput(params, avg_file_mb, n_files, load,
+                                    contending_mbps=contending,
+                                    n_contending=n_active)
         noisy = mean * float(1.0 + self._rng.normal(0.0, self.noise_sigma))
         noisy = max(noisy, 0.01 * mean)
 
@@ -213,6 +233,7 @@ class Environment:
         elapsed = setup_s + steady_s
         effective = (size_mb * 8.0) / elapsed
 
+        self._register_flow(float(noisy), self.clock_s + elapsed)
         self.advance(elapsed)
         if is_sample:
             self.sample_count += 1
@@ -225,3 +246,74 @@ class Environment:
         mean = self.mean_throughput(params, avg_file_mb, n_files, load)
         return float(max(mean * (1.0 + self._rng.normal(0.0, self.noise_sigma)),
                          0.01 * mean))
+
+
+# ----------------------------------------------------------------------- #
+# shared-link contention (fleet mode)
+# ----------------------------------------------------------------------- #
+class SharedLink:
+    """Mutable contention state of one physical link carrying many transfers.
+
+    Each tenant's chunk transfer registers its (rate, end-time) interval;
+    chunks starting later see the aggregate rate of intervals still active
+    and the contending-flow count, which the throughput law turns into a
+    fair-share capacity division.  Rates are quasi-static: a chunk's rate is
+    solved once at its start against the contenders visible at that instant,
+    not re-solved when later chunks arrive mid-flight.
+    """
+
+    def __init__(self, link: LinkSpec):
+        self.link = link
+        self._flows: dict[int, tuple[float, float]] = {}  # id -> (rate, end_s)
+        self._lock = threading.Lock()
+
+    def snapshot(self, now_s: float, exclude: int) -> tuple[float, int]:
+        """(aggregate contending Mbit/s, active flow count) at ``now_s``."""
+        with self._lock:
+            live = [rate for tid, (rate, end) in self._flows.items()
+                    if tid != exclude and end > now_s]
+        return float(sum(live)), len(live)
+
+    def register(self, tenant_id: int, rate_mbps: float, end_s: float) -> None:
+        with self._lock:
+            self._flows[tenant_id] = (rate_mbps, end_s)
+
+    def release(self, tenant_id: int) -> None:
+        with self._lock:
+            self._flows.pop(tenant_id, None)
+
+
+class TenantEnvironment(Environment):
+    """One tenant's view of a link shared with other concurrent transfers.
+
+    Behaves exactly like :class:`Environment` when it is alone on the link
+    (zero contenders reduce the fair-share division to the single-tenant
+    law and the RNG stream is untouched), which is what lets an N=1 fleet
+    reproduce the single-tenant ``TransferReport`` bit-for-bit.  ``turn_gate``
+    is an optional callable returning a context manager; the fleet scheduler
+    uses it to serialize env interactions in simulated-time order.
+    """
+
+    def __init__(self, link: LinkSpec, traffic, shared: SharedLink,
+                 tenant_id: int, *, noise_sigma: float = 0.03, seed: int = 0,
+                 turn_gate=None):
+        super().__init__(link, traffic, noise_sigma=noise_sigma, seed=seed)
+        self.shared = shared
+        self.tenant_id = tenant_id
+        self.turn_gate = turn_gate
+
+    def _contention(self) -> tuple[float, int]:
+        return self.shared.snapshot(self.clock_s, self.tenant_id)
+
+    def _register_flow(self, rate_mbps: float, end_s: float) -> None:
+        self.shared.register(self.tenant_id, rate_mbps, end_s)
+
+    def transfer(self, params: TransferParams, size_mb: float,
+                 avg_file_mb: float, n_files: int, *,
+                 is_sample: bool = False) -> TransferResult:
+        if self.turn_gate is None:
+            return super().transfer(params, size_mb, avg_file_mb, n_files,
+                                    is_sample=is_sample)
+        with self.turn_gate(self):
+            return super().transfer(params, size_mb, avg_file_mb, n_files,
+                                    is_sample=is_sample)

@@ -47,3 +47,30 @@ class DiurnalTraffic:
     def constant(load: float) -> "DiurnalTraffic":
         t = DiurnalTraffic(base_load=load, peak_load=0.0, jitter=0.0)
         return t
+
+
+@dataclasses.dataclass
+class StepTraffic:
+    """Piecewise-constant external load: ``steps`` is [(start_s, load), ...].
+
+    The load at time t is the value of the last step whose start is <= t
+    (``initial`` before the first step).  Deterministic — fleet tests use it
+    to script harsh load changes that hit every tenant at the same instant,
+    where DiurnalTraffic's per-instance random walk would decorrelate them.
+    """
+    steps: list[tuple[float, float]]
+    initial: float = 0.0
+
+    def __post_init__(self):
+        self.steps = sorted(self.steps)
+
+    def load_at(self, t_s: float) -> float:
+        load = self.initial
+        for start, level in self.steps:
+            if t_s < start:
+                break
+            load = level
+        return float(min(max(load, 0.0), 0.95))
+
+    def is_peak(self, t_s: float) -> bool:
+        return self.load_at(t_s) >= 0.5

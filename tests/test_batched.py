@@ -1,0 +1,146 @@
+"""Batched (vmapped) surface path vs the scalar path, and the Pallas
+predict/argmax selection kernel vs its XLA oracle (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TransferTuner, TunerConfig
+from repro.core.batched import closest_surface_index, within_band
+from repro.core.online import _closest_surface
+from repro.kernels.ops import transfer_predict_argmax
+from repro.kernels.transfer_select import batched_predict_argmax_pallas
+from repro.netsim import (
+    ParamBounds,
+    TransferParams,
+    generate_history,
+    make_testbed,
+)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    env = make_testbed("xsede", seed=3)
+    hist = generate_history(env, days=4, transfers_per_day=120, seed=0)
+    db = TransferTuner(TunerConfig(seed=0)).fit(hist).db
+    return db.clusters[0], db.bounds
+
+
+@pytest.fixture(scope="module")
+def stack(cluster):
+    ck, bounds = cluster
+    return ck.surface_stack(bounds)
+
+
+def _int_points(n, bounds=ParamBounds()):
+    return np.stack(
+        [
+            RNG.integers(1, bounds.max_cc + 1, n),
+            RNG.integers(1, bounds.max_p + 1, n),
+            RNG.integers(1, bounds.max_pp + 1, n),
+        ],
+        axis=-1,
+    )
+
+
+def test_batched_predict_matches_scalar_path(cluster, stack):
+    """Acceptance: batched path agrees with scalar to <= 1e-5 rel error."""
+    ck, _ = cluster
+    surfaces = ck.sorted_by_load()
+    pts = _int_points(128)
+    batched = np.asarray(stack.predict(pts))  # (128, S)
+    scalar = np.array(
+        [[s.predict(TransferParams(*map(int, p))) for s in surfaces] for p in pts]
+    )
+    rel = np.abs(batched - scalar) / np.maximum(np.abs(scalar), 1e-9)
+    assert rel.max() <= 1e-5, f"batched/scalar divergence: {rel.max():.2e}"
+
+
+def test_batched_argmax_points_match_precomputed(cluster, stack):
+    ck, _ = cluster
+    surfaces = ck.sorted_by_load()
+    preds = np.asarray(stack.predict(stack.argmax_pts))  # (S, S)
+    for i, s in enumerate(surfaces):
+        assert preds[i, i] == pytest.approx(s.predict(s.argmax_params), rel=1e-5)
+
+
+@pytest.mark.parametrize("direction,lighter", [(-1, True), (1, False), (0, None)])
+def test_closest_surface_index_matches_scalar(cluster, direction, lighter):
+    ck, _ = cluster
+    surfaces = ck.sorted_by_load()
+    pts = _int_points(64)
+    preds = np.array(
+        [[s.predict(TransferParams(*map(int, p))) for s in surfaces] for p in pts]
+    )
+    achieved = preds[:, 0] * RNG.uniform(0.5, 1.5, len(pts))
+    got = np.asarray(
+        closest_surface_index(
+            jnp.asarray(preds, jnp.float32),
+            jnp.asarray(achieved, jnp.float32),
+            jnp.full(len(pts), direction, jnp.int32),
+        )
+    )
+    for k, (p, a) in enumerate(zip(pts, achieved)):
+        want = _closest_surface(
+            surfaces, TransferParams(*map(int, p)), a, lighter=lighter
+        )
+        want_idx = next(i for i, s in enumerate(surfaces) if s is want)
+        assert got[k] == want_idx
+
+
+def test_within_band_matches_scalar(cluster, stack):
+    ck, _ = cluster
+    surfaces = ck.sorted_by_load()
+    pts = _int_points(32)
+    preds = stack.predict(pts)
+    achieved = np.asarray(preds)[:, 0] * RNG.uniform(0.7, 1.3, len(pts))
+    got = np.asarray(
+        within_band(preds, stack.sigma, jnp.asarray(achieved, jnp.float32), 2.0)
+    )
+    for k, p in enumerate(pts):
+        for i, s in enumerate(surfaces):
+            want = s.in_confidence(TransferParams(*map(int, p)), achieved[k])
+            assert got[k, i] == want
+
+
+def test_pallas_select_kernel_matches_ref(stack):
+    cand = _int_points(16 * 12).reshape(16, 12, 3)
+    idx = np.asarray(stack.flat_index(cand))
+    best_ref, argk_ref = transfer_predict_argmax(stack.flat_values, idx)
+    best_pal, argk_pal = batched_predict_argmax_pallas(
+        stack.flat_values, jnp.asarray(idx), interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(best_pal), np.asarray(best_ref), rtol=1e-6, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(argk_pal), np.asarray(argk_ref))
+
+
+def test_pallas_select_kernel_ragged_batch(stack):
+    # batch not a multiple of the block size exercises the padding path
+    cand = _int_points(5 * 7).reshape(5, 7, 3)
+    idx = np.asarray(stack.flat_index(cand))
+    best_ref, argk_ref = transfer_predict_argmax(stack.flat_values, idx)
+    best_pal, argk_pal = batched_predict_argmax_pallas(
+        stack.flat_values, jnp.asarray(idx), bb=2, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(best_pal), np.asarray(best_ref), rtol=1e-6, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(argk_pal), np.asarray(argk_ref))
+
+
+def test_surface_stack_sorted_by_load(stack):
+    load = np.asarray(stack.load)
+    assert (np.diff(load) >= 0).all()
+    assert stack.values.shape[1:] == (16, 16, 16)
+
+
+def test_stack_cache_invalidated_on_update(cluster):
+    ck, bounds = cluster
+    first = ck.surface_stack(bounds)
+    assert ck.surface_stack(bounds) is first  # cached
+    ck._stack = None
+    assert ck.surface_stack(bounds) is not first

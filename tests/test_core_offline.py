@@ -8,11 +8,10 @@ from repro.core.contention import (
 )
 from repro.core.maxima import find_local_maxima, integer_argmax
 from repro.core.offline import offline_analysis
-from repro.core.regions import identify_sampling_regions
 from repro.core.spline import TricubicSurface
 from repro.core.surfaces import fit_surface, surface_accuracy, fit_poly_surface
 from repro.netsim import (
-    make_testbed, generate_history, ParamBounds, TransferParams,
+    make_testbed, generate_history, ParamBounds,
 )
 
 

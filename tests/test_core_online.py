@@ -4,8 +4,7 @@ import pytest
 
 from repro.core import TransferTuner, TunerConfig
 from repro.core.baselines import (
-    ALL_BASELINES, GlobusStatic, HARP, ANNOT, NelderMeadTuner, SingleChunk,
-    StaticParams, run_transfer,
+    ALL_BASELINES, GlobusStatic, NelderMeadTuner, run_transfer,
 )
 from repro.netsim import (
     make_testbed, make_dataset, generate_history, ParamBounds,
@@ -234,6 +233,75 @@ def test_bulk_drift_needs_two_consecutive_strikes():
     assert rep.params.as_tuple() == p_heavy.as_tuple()
     # exactly one extra param change beyond the two distinct probe points
     assert rep.param_changes == 3
+
+
+def test_closest_surface_direction_filtering():
+    """FindClosestSurface honors the band-miss direction restriction."""
+    from repro.core.online import _closest_surface
+    from repro.netsim.environment import TransferParams
+
+    prm = TransferParams(1, 1, 1)
+    light = _ScriptedSurface(0.2, prm, level=100.0, band=10.0)
+    mid = _ScriptedSurface(0.5, prm, level=70.0, band=10.0)
+    heavy = _ScriptedSurface(0.8, prm, level=40.0, band=10.0)
+    surfaces = [light, mid, heavy]
+
+    # achieved=90: unrestricted picks light (distance 10), but a lighter-load
+    # restriction only admits surfaces predicting <= 90 -> mid
+    assert _closest_surface(surfaces, prm, 90.0, lighter=None) is light
+    assert _closest_surface(surfaces, prm, 90.0, lighter=True) is mid
+
+    # achieved=45: unrestricted picks heavy (distance 5), but a heavier-load
+    # restriction only admits surfaces predicting >= 45 -> mid
+    assert _closest_surface(surfaces, prm, 45.0, lighter=None) is heavy
+    assert _closest_surface(surfaces, prm, 45.0, lighter=False) is mid
+
+    # empty direction filter falls back to the full stack
+    assert _closest_surface(surfaces, prm, 20.0, lighter=True) is heavy
+    assert _closest_surface(surfaces, prm, 120.0, lighter=False) is light
+
+
+def test_param_changes_counts_switches_not_distinct_tuples():
+    """A probe revisiting an earlier tuple is a paid switch; the report must
+    count transitions, not distinct parameter tuples."""
+    import types
+    from repro.core.online import AdaptiveSampler
+    from repro.netsim.environment import TransferParams
+    from repro.netsim.workload import Dataset
+
+    p_probe = TransferParams(1, 1, 1)
+    p_light = TransferParams(4, 4, 4)
+    p_heavy = TransferParams(2, 2, 2)
+    ds = Dataset("scripted", "medium", avg_file_mb=100.0, n_files=100)
+    light = _ScriptedSurface(0.2, p_light, level=100.0, band=5.0)
+    heavy = _ScriptedSurface(0.8, p_heavy, level=50.0, band=5.0)
+    cluster = types.SimpleNamespace(
+        region=types.SimpleNamespace(discriminative_points=[p_probe]),
+        sorted_by_load=lambda: [light, heavy])
+    db = types.SimpleNamespace(query=lambda features: cluster)
+
+    # disc probe (100 -> light) -> light argmax probe misses low (60, no
+    # heavier candidate predicts >= 60 except light itself -> converged) ->
+    # bulk at p_light misses twice (50, 50) -> jump to heavy -> in band.
+    # Switch sequence probe -> light -> heavy: 3 setup costs paid.
+    env = _ScriptedEnv([100.0, 60.0] + [50.0] * 8)
+    rep = AdaptiveSampler(db, max_samples=3, bulk_chunks=8).transfer(env, ds)
+    assert rep.param_changes == 3
+
+    # revisit case: the closest surface's argmax IS the discriminative probe
+    # tuple.  Probes go p_probe -> p_light -> p_probe: the old distinct-tuple
+    # count says 2, but 3 session setups were actually paid.
+    heavy_on_probe = _ScriptedSurface(0.8, p_probe, level=50.0, band=5.0)
+    cluster2 = types.SimpleNamespace(
+        region=types.SimpleNamespace(discriminative_points=[p_probe]),
+        sorted_by_load=lambda: [light, heavy_on_probe])
+    db2 = types.SimpleNamespace(query=lambda features: cluster2)
+    env2 = _ScriptedEnv([100.0, 50.0, 50.0] + [50.0] * 8)
+    rep2 = AdaptiveSampler(db2, max_samples=3, bulk_chunks=8).transfer(env2, ds)
+    probes = [r.params.as_tuple() for r in rep2.samples if r.was_sample]
+    assert probes == [p_probe.as_tuple(), p_light.as_tuple(),
+                      p_probe.as_tuple()]
+    assert rep2.param_changes == 3
 
 
 def test_nmt_slow_convergence_penalty(xsede_history):

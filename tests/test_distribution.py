@@ -1,7 +1,6 @@
 """Distribution substrates: sharding rules, collectives, optimizer,
 checkpointing, elastic recovery, straggler detection, data pipeline."""
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,6 @@ from repro.dist.collectives import (BucketPlan, allreduce_bytes,
                                     ici_environment, plan_from_tuner_params,
                                     quantized_allreduce, unflatten_grads)
 from repro.dist.sharding import (ShardingReport, default_rules, spec_for)
-from repro.netsim.environment import TransferParams
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.grad_utils import (clip_by_global_norm, dequantize_int8,
                                     global_norm, quantize_int8)

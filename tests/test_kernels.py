@@ -1,6 +1,5 @@
 """Pallas kernels vs. pure-jnp oracles (interpret mode), with shape/dtype
 sweeps, plus chunked-vs-sequential oracle equivalence."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -48,7 +47,8 @@ def test_flash_attention_matches_oracle(case):
 
 
 def test_flash_attention_block_size_invariance():
-    q = _rand((1, 256, 4, 64)); k = _rand((1, 256, 2, 64))
+    q = _rand((1, 256, 4, 64))
+    k = _rand((1, 256, 2, 64))
     v = _rand((1, 256, 2, 64))
     a = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
     b = flash_attention_pallas(q, k, v, bq=64, bk=32, interpret=True)
@@ -152,7 +152,8 @@ def test_ssd_decode_step_matches_scan_tail():
     x = _rand((B, L, H, P))
     dt = jnp.asarray(RNG.uniform(0.05, 0.2, (B, L, H)), jnp.float32)
     A = jnp.asarray(-RNG.uniform(0.5, 1.0, (H,)), jnp.float32)
-    Bm = _rand((B, L, N)); Cm = _rand((B, L, N))
+    Bm = _rand((B, L, N))
+    Cm = _rand((B, L, N))
     y_all, state = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=16,
                                        return_state=True)
     # replay the last token from the state after L-1 tokens

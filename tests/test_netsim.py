@@ -1,6 +1,4 @@
 """Network-simulator invariants the paper's assumptions rely on."""
-import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 

@@ -1,6 +1,5 @@
 """Spline machinery vs. scipy + interpolation invariants (Sec. 3.1.1)."""
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 from scipy.interpolate import CubicSpline as SciSpline

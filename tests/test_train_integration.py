@@ -1,12 +1,10 @@
 """Integration: train loop convergence, checkpoint/resume determinism,
 elastic recovery, sharded end-to-end step on a small mesh."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import CkptParams, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
