@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, timed
+from repro.core.spline import nat_spline_coeffs
 from repro.kernels import ref
+from repro.kernels.ops import nat_spline_fit
 
 
 def run(smoke: bool = False):
@@ -48,6 +50,30 @@ def run(smoke: bool = False):
     jax.block_until_ready(fr(r, w))
     _, us = timed(lambda: jax.block_until_ready(fr(r, w)))
     rows.append((f"rwkv6_chunked_{S // 2}", us, f"finch wkv 2x{S // 2}xH4K64"))
+
+    # --- batched spline refit (continuous-refresh hot path) ------------ #
+    # B (cluster, bin) surfaces x 256 rows each over shared knots: the
+    # sequential numpy path solves one bin at a time (what OfflineDB.update
+    # did per refit before the batched port); the vmapped Thomas kernel
+    # fits every row of every touched bin in one call.
+    n_bins, rows_per, n_knots = (12, 256, 12) if smoke else (48, 256, 12)
+    x = np.sort(rng.choice(np.arange(1.0, 33.0), n_knots, replace=False))
+    Ys = [rng.normal(size=(rows_per, n_knots)) for _ in range(n_bins)]
+    Yall = np.concatenate(Ys, axis=0)
+
+    def numpy_seq():
+        return [nat_spline_coeffs(x, Y) for Y in Ys]
+
+    np_out, np_us = timed(numpy_seq)
+    jax.block_until_ready(nat_spline_fit(x, Yall))  # warm the jit cache
+    jx_out, jx_us = timed(lambda: jax.block_until_ready(nat_spline_fit(x, Yall)))
+    maxdiff = float(np.abs(np.asarray(jx_out)
+                           - np.concatenate(np_out, axis=0)).max())
+    rows.append((f"spline_fit_numpy_seq_{n_bins}x{rows_per}", np_us,
+                 f"{n_bins} sequential nat_spline_coeffs calls"))
+    rows.append((f"spline_fit_batched_{n_bins}x{rows_per}", jx_us,
+                 f"speedup={np_us / max(jx_us, 1e-9):.1f}x "
+                 f"maxdiff={maxdiff:.1e}"))
     return rows
 
 

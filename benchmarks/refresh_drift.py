@@ -1,0 +1,135 @@
+"""Continuous-refresh drift benchmark: frozen vs refreshed knowledge across
+an abrupt load-regime shift (the paper's "harsh network change", fleet-scale).
+
+The offline DB is mined from history collected under light external load;
+mid-run, ``RegimeShiftTraffic`` jumps the load to a level the history never
+saw.  The same staggered fleet then runs twice — once with the DB frozen
+(every achieved throughput discarded, the pre-PR status quo) and once with
+``FleetConfig.refresh`` folding completed sessions back into the DB — and
+the post-shift sessions are scored on prediction accuracy (Eq. 25 against
+their own converged surface) and steady-rate accuracy vs the single-tenant
+optimum under the shifted load.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    FleetConfig,
+    FleetRequest,
+    FleetScheduler,
+    RefreshConfig,
+    TransferTuner,
+    TunerConfig,
+)
+from repro.netsim import (
+    DiurnalTraffic,
+    Environment,
+    ParamBounds,
+    RegimeShiftTraffic,
+    XSEDE,
+    generate_history,
+    make_dataset,
+)
+
+START = 4 * 3600.0
+SHIFT_S = START + 600.0  # regime shift ten minutes into the fleet run
+
+
+def _light_history(days: float, per_day: int):
+    """History mined under light load only: the shifted regime is unseen."""
+    traffic = DiurnalTraffic(base_load=0.05, peak_load=0.15, jitter=0.02, seed=20)
+    return generate_history(
+        Environment(XSEDE, traffic, seed=3), days=days, transfers_per_day=per_day
+    )
+
+
+def _requests(n_pre: int, n_post: int, traffic) -> list[FleetRequest]:
+    reqs = []
+    for i in range(n_pre):
+        reqs.append(
+            FleetRequest(
+                dataset=make_dataset(["medium", "large"][i % 2], 30 + i),
+                env_seed=500 + i,
+                start_clock_s=START + 30.0 * i,
+                traffic=traffic,
+            )
+        )
+    for i in range(n_post):
+        reqs.append(
+            FleetRequest(
+                dataset=make_dataset(["medium", "large"][i % 2], 60 + i),
+                env_seed=700 + i,
+                start_clock_s=SHIFT_S + 120.0 + 60.0 * i,
+                traffic=traffic,
+            )
+        )
+    return reqs
+
+
+def _post_shift_scores(reqs, report) -> tuple[float, float]:
+    """(mean steady-vs-optimum %, mean prediction accuracy %) post-shift."""
+    accs, preds = [], []
+    for req, rep in zip(reqs, report.reports):
+        if req.start_clock_s < SHIFT_S:
+            continue
+        env = Environment(XSEDE, req.traffic, seed=req.env_seed)
+        env.clock_s = req.start_clock_s
+        _, opt = env.optimal(
+            ParamBounds(), req.dataset.avg_file_mb, req.dataset.n_files
+        )
+        accs.append(100.0 * min(rep.steady_mbps, opt) / max(opt, 1e-9))
+        preds.append(rep.prediction_accuracy)
+    n = max(len(accs), 1)
+    return sum(accs) / n, sum(preds) / n
+
+
+def run(smoke: bool = False) -> dict:
+    days, per_day = (4, 120) if smoke else (10, 180)
+    n_pre, n_post = (3, 6) if smoke else (6, 18)
+    hist = _light_history(days, per_day)
+    traffic = RegimeShiftTraffic(shift_s=SHIFT_S, before=0.10, after=0.55, ripple=0.02)
+    out: dict = {}
+    for policy, refresh in (
+        ("frozen", None),
+        ("refreshed", RefreshConfig(every_completions=2, min_entries=8)),
+    ):
+        db = TransferTuner(TunerConfig(seed=0)).fit(hist).db
+        reqs = _requests(n_pre, n_post, traffic)
+        cfg = FleetConfig(max_concurrent=4, score_vs_single=False, refresh=refresh)
+        t0 = time.perf_counter()
+        report = FleetScheduler(db, config=cfg).run(reqs)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        acc, pred = _post_shift_scores(reqs, report)
+        out[policy] = {
+            "report": report,
+            "wall_us": wall_us,
+            "post_acc": acc,
+            "post_pred": pred,
+        }
+    return out
+
+
+def main(smoke: bool = False):
+    out = run(smoke)
+    for policy in ("frozen", "refreshed"):
+        o = out[policy]
+        fr = o["report"]
+        print(
+            f"refresh_drift_{policy},{o['wall_us']:.0f},"
+            f"post_acc={o['post_acc']:.1f}% post_pred={o['post_pred']:.1f}% "
+            f"goodput={fr.goodput_mbps:.0f}Mbps "
+            f"refreshes={fr.refreshes}({fr.refreshed_entries}entries)"
+        )
+    d_acc = out["refreshed"]["post_acc"] - out["frozen"]["post_acc"]
+    d_pred = out["refreshed"]["post_pred"] - out["frozen"]["post_pred"]
+    print(
+        f"refresh_drift_gain,0,post_acc_delta={d_acc:+.1f}pts "
+        f"post_pred_delta={d_pred:+.1f}pts"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main()

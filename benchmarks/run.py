@@ -26,6 +26,7 @@ MODULES = [
     ("ckpt", "benchmarks.ckpt_tuning"),
     ("kernels", "benchmarks.kernels_bench"),
     ("fleet", "benchmarks.fleet_scale"),
+    ("refresh", "benchmarks.refresh_drift"),
 ]
 
 

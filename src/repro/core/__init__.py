@@ -12,6 +12,9 @@ from repro.core.offline import OfflineDB, offline_analysis
 from repro.core.online import AdaptiveSampler, TransferReport
 from repro.core.tuner import TransferTuner, TunerConfig
 from repro.core.batched import SurfaceStack
+from repro.core.refresh import (
+    ClusterStaleness, KnowledgeRefresher, RefreshConfig, session_log_entries,
+)
 from repro.core.fleet import (
     FleetConfig, FleetReport, FleetRequest, FleetScheduler, ReprobeLimiter,
 )
@@ -23,6 +26,7 @@ __all__ = [
     "find_local_maxima", "integer_argmax", "identify_sampling_regions",
     "SamplingRegion", "OfflineDB", "offline_analysis", "AdaptiveSampler",
     "TransferReport", "TransferTuner", "TunerConfig", "SurfaceStack",
-    "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
-    "ReprobeLimiter",
+    "ClusterStaleness", "KnowledgeRefresher", "RefreshConfig",
+    "session_log_entries", "FleetConfig", "FleetReport", "FleetRequest",
+    "FleetScheduler", "ReprobeLimiter",
 ]

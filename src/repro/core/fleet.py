@@ -40,19 +40,27 @@ import numpy as np
 
 from repro.core.offline import OfflineDB
 from repro.core.online import AdaptiveSampler, TransferReport, request_features
-from repro.netsim.environment import SharedLink, TenantEnvironment
+from repro.core.refresh import KnowledgeRefresher, RefreshConfig
+from repro.netsim.environment import Environment, SharedLink, TenantEnvironment
 from repro.netsim.testbeds import TESTBEDS, make_testbed
 from repro.netsim.workload import Dataset
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetRequest:
-    """One tenant's transfer request."""
+    """One tenant's transfer request.
+
+    ``traffic`` overrides the testbed's diurnal background-load model for
+    this tenant's path; it must be stateless/deterministic (a pure function
+    of simulated time, e.g. ``netsim.RegimeShiftTraffic``) so fleet runs
+    stay reproducible and instances can be shared across tenants.
+    """
 
     dataset: Dataset
     env_seed: int = 0
     start_clock_s: float = 0.0
     constant_load: float | None = None  # pin external load (tests/benchmarks)
+    traffic: object | None = None  # custom external-load model
 
 
 @dataclasses.dataclass
@@ -62,6 +70,8 @@ class FleetConfig:
     overcommit: float = 2.0  # admitted demand may exceed capacity by this
     reprobe_interval_s: float = 5.0  # fleet-wide min spacing of re-probes
     score_vs_single: bool = True  # compute accuracy vs single-tenant optimum
+    refresh: RefreshConfig | None = None  # continuous knowledge refresh; None
+    # = off, which reproduces refresh-free fleet runs bit-for-bit
 
 
 @dataclasses.dataclass
@@ -77,6 +87,8 @@ class FleetReport:
     reprobe_grants: int
     reprobe_denials: int
     admitted_concurrency: int  # admission cap actually used
+    refreshes: int = 0  # continuous-refresh rounds run during the fleet
+    refreshed_entries: int = 0  # log entries folded back into the OfflineDB
 
 
 class ReprobeLimiter:
@@ -272,9 +284,10 @@ class FleetScheduler:
             seed=req.env_seed,
             constant_load=req.constant_load,
         )
+        traffic = req.traffic if req.traffic is not None else base.traffic
         return TenantEnvironment(
             base.link,
-            base.traffic,
+            traffic,
             shared,
             tenant_id,
             noise_sigma=base.noise_sigma,
@@ -284,13 +297,25 @@ class FleetScheduler:
 
     def _single_tenant_optimum(self, req: FleetRequest, at_clock_s: float) -> float:
         ds = req.dataset
-        key = (self.config.testbed, req.env_seed, req.constant_load, ds, at_clock_s)
+        key = (
+            self.config.testbed,
+            req.env_seed,
+            req.constant_load,
+            req.traffic,
+            ds,
+            at_clock_s,
+        )
         if key not in _OPT_CACHE:
-            env = make_testbed(
-                self.config.testbed,
-                seed=req.env_seed,
-                constant_load=req.constant_load,
-            )
+            if req.traffic is not None:
+                env = Environment(
+                    TESTBEDS[self.config.testbed], req.traffic, seed=req.env_seed
+                )
+            else:
+                env = make_testbed(
+                    self.config.testbed,
+                    seed=req.env_seed,
+                    constant_load=req.constant_load,
+                )
             env.clock_s = at_clock_s
             _, opt = env.optimal(self.db.bounds, ds.avg_file_mb, ds.n_files)
             _OPT_CACHE[key] = opt
@@ -307,6 +332,11 @@ class FleetScheduler:
         limiter = ReprobeLimiter(
             self.config.reprobe_interval_s, n_active_fn=clock.n_active_at
         )
+        refresher = (
+            KnowledgeRefresher(self.db, link, self.config.refresh)
+            if self.config.refresh is not None
+            else None
+        )
         cap = self.config.max_concurrent or self._auto_concurrency(requests, link)
 
         order = sorted(range(n), key=lambda i: (requests[i].start_clock_s, i))
@@ -314,6 +344,13 @@ class FleetScheduler:
         admit_time = [0.0] * n
         admit_events = [threading.Event() for _ in range(n)]
         admit_lock = threading.Lock()
+        # Knowledge snapshot per tenant, resolved at admission: admissions
+        # happen either before any worker runs (the initial wave) or inside a
+        # finishing tenant's serialized turn, i.e. in simulated-time order —
+        # so under continuous refresh every session still gets a
+        # deterministic, fully-consistent cluster, instead of racing its
+        # wall-clock db.query against a concurrent refit swap.
+        admitted_cluster = [None] * n
 
         def admit_next(now_s: float) -> None:
             with admit_lock:
@@ -321,6 +358,9 @@ class FleetScheduler:
                     return
                 i = pending.popleft()
                 admit_time[i] = max(requests[i].start_clock_s, now_s)
+                admitted_cluster[i] = self.db.query(
+                    request_features(link, requests[i].dataset)
+                )
                 # Register with the fleet clock BEFORE releasing the worker:
                 # from this point every already-running tenant waits for i
                 # whenever i's clock is the fleet minimum, even if i's thread
@@ -353,7 +393,9 @@ class FleetScheduler:
                     bulk_chunks=self.bulk_chunks,
                     reprobe_gate=gate,
                 )
-                reports[i] = sampler.transfer(env, requests[i].dataset)
+                reports[i] = sampler.transfer(
+                    env, requests[i].dataset, cluster=admitted_cluster[i]
+                )
             except BaseException as e:  # surfaced after join
                 errors.append(e)
             finally:
@@ -366,9 +408,16 @@ class FleetScheduler:
                 # wall-clock thread-scheduling order.  The finished tenant's
                 # last flow interval stays registered on the shared link —
                 # it still occupies simulated time other tenants have not
-                # reached — and expires by its own end time.
+                # reached — and expires by its own end time.  Continuous
+                # refresh folds the finished session in inside this same
+                # turn, so refreshes too land in simulated-time finish order
+                # and queued admissions snapshot post-refresh knowledge.
                 if env is not None:
                     with clock.turn(env):
+                        if refresher is not None and reports[i] is not None:
+                            refresher.observe(
+                                reports[i], requests[i].dataset, now_s=now
+                            )
                         admit_next(now)
                 else:
                     admit_next(now)
@@ -414,4 +463,8 @@ class FleetScheduler:
             reprobe_grants=limiter.grants,
             reprobe_denials=limiter.denials,
             admitted_concurrency=min(cap, n),
+            refreshes=refresher.refreshes if refresher is not None else 0,
+            refreshed_entries=(
+                refresher.entries_folded if refresher is not None else 0
+            ),
         )

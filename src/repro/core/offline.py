@@ -23,7 +23,9 @@ from repro.core.contention import (
     load_intensity, residual_intensity_bins,
 )
 from repro.core.regions import SamplingRegion, identify_sampling_regions
-from repro.core.surfaces import ThroughputSurface, fit_surface
+from repro.core.surfaces import (
+    ThroughputSurface, fit_surface, fit_surfaces_batched,
+)
 from repro.netsim.environment import ParamBounds
 from repro.netsim.loggen import LogEntry
 
@@ -35,6 +37,7 @@ class ClusterKnowledge:
     surfaces: list[ThroughputSurface]      # sorted ascending by load intensity
     region: SamplingRegion
     entries: list[LogEntry]                # raw store for additive refits
+    region_seed: int = 0                   # persisted so refits are replayable
     dirty: bool = False
     _stack: object = dataclasses.field(default=None, repr=False, compare=False)
 
@@ -69,40 +72,79 @@ class OfflineDB:
         return self.clusters[k]
 
     # ------------------------------------------------------------------ #
-    def update(self, new_entries: list[LogEntry]) -> None:
-        """Additive refresh: only touched (cluster, bin) surfaces are refit."""
+    def update(self, new_entries: list[LogEntry], *,
+               batched_fit: bool = False,
+               use_pallas: bool = False,
+               assignments: list[int] | None = None) -> set[int]:
+        """Additive refresh: only touched (cluster, bin) surfaces are refit.
+
+        Each touched cluster is rebuilt into a *fresh* ``ClusterKnowledge``
+        and published with a single list-slot swap, so concurrent readers —
+        in-flight sessions and batched admission queries hold the old object
+        — never observe a half-refit cluster (new surfaces with a stale
+        region or ``SurfaceStack``).  The per-cluster region seed persists
+        across refits, keeping a refit cluster's sampling region identical
+        to a from-scratch fit of the same entries.  ``batched_fit`` routes
+        the spline solves through the vmapped Thomas kernel
+        (``kernels.ops.nat_spline_fit``; Pallas on TPU with ``use_pallas``).
+        ``assignments`` are precomputed cluster indices for ``new_entries``
+        (the refresher routes entries for staleness tracking anyway, so the
+        nearest-centroid pass need not run twice).  Returns the refit
+        cluster indices.
+        """
+        if assignments is None:
+            assignments = [int(self.cluster_model.assign(e.features()))
+                           for e in new_entries]
         touched = set()
-        for e in new_entries:
-            k = self.cluster_model.assign(e.features())
+        for e, k in zip(new_entries, assignments):
             self.clusters[k].entries.append(e)
-            touched.add(k)
+            touched.add(int(k))
         for k in touched:
             ck = self.clusters[k]
-            ck.surfaces = _fit_cluster_surfaces(ck.entries, self.n_load_bins,
-                                                self.bounds)
-            ck.region = identify_sampling_regions(ck.surfaces, self.bounds)
-            ck.dirty = False
-            ck._stack = None           # stale batched view; rebuilt lazily
+            surfaces = _fit_cluster_surfaces(ck.entries, self.n_load_bins,
+                                             self.bounds, batched=batched_fit,
+                                             use_pallas=use_pallas)
+            region = identify_sampling_regions(surfaces, self.bounds,
+                                               seed=ck.region_seed)
+            fresh = ClusterKnowledge(ck.centroid, surfaces, region,
+                                     ck.entries, region_seed=ck.region_seed)
+            if ck._stack is not None:
+                # keep the batched admission view warm: build the new stack
+                # for the cached bounds *before* publishing the swap
+                fresh.surface_stack(ck._stack[0])
+            self.clusters[k] = fresh
+        return touched
 
 
 def _fit_cluster_surfaces(entries: list[LogEntry], n_load_bins: int,
-                          bounds: ParamBounds) -> list[ThroughputSurface]:
+                          bounds: ParamBounds, *, batched: bool = False,
+                          use_pallas: bool = False) -> list[ThroughputSurface]:
     n_bins = max(1, min(n_load_bins, len(entries) // 24))
     if n_bins <= 1 or len(entries) < 16:
-        return [fit_surface(entries, float(np.mean(
-            [load_intensity(e) for e in entries])), bounds)]
+        jobs = [(entries, float(np.mean(
+            [load_intensity(e) for e in entries])))]
+        return _fit_jobs(jobs, bounds, batched, use_pallas)
     # load-agnostic base surface, used to explain away parameter effects
-    base = fit_surface(entries, 0.5, bounds)
+    base = _fit_jobs([(entries, 0.5)], bounds, batched, use_pallas)[0]
     bin_idx, centers = residual_intensity_bins(entries, n_bins, base.surface)
-    out = []
+    jobs = []
     for b in range(n_bins):
         sel = [e for e, i in zip(entries, bin_idx) if i == b]
         if len(sel) < 8:
             continue
-        out.append(fit_surface(sel, centers[b], bounds))
+        jobs.append((sel, float(centers[b])))
+    out = _fit_jobs(jobs, bounds, batched, use_pallas)
     if not out:  # degenerate cluster: single surface over everything
         out.append(base)
     return sorted(out, key=lambda s: s.load_intensity)
+
+
+def _fit_jobs(jobs, bounds: ParamBounds, batched: bool,
+              use_pallas: bool) -> list[ThroughputSurface]:
+    """Fit one surface per (entries, load) job, scalar or batched-Thomas."""
+    if batched and jobs:
+        return fit_surfaces_batched(jobs, bounds, use_pallas=use_pallas)
+    return [fit_surface(e, load, bounds) for e, load in jobs]
 
 
 def offline_analysis(entries: list[LogEntry], *,
@@ -121,6 +163,7 @@ def offline_analysis(entries: list[LogEntry], *,
             sel = entries[:8]
         surfaces = _fit_cluster_surfaces(sel, n_load_bins, bounds)
         region = identify_sampling_regions(surfaces, bounds, seed=seed + k)
-        clusters.append(ClusterKnowledge(cm.centroids[k], surfaces, region, sel))
+        clusters.append(ClusterKnowledge(cm.centroids[k], surfaces, region,
+                                         sel, region_seed=seed + k))
     return OfflineDB(clusters, cm, bounds, n_load_bins,
                      time.perf_counter() - t0)

@@ -179,9 +179,19 @@ class AdaptiveSampler:
         return cur
 
     # ------------------------------------------------------------------ #
-    def transfer(self, env: Environment, dataset: Dataset) -> TransferReport:
-        features = _request_features(env, dataset)
-        cluster = self.db.query(features)
+    def transfer(self, env: Environment, dataset: Dataset,
+                 cluster: ClusterKnowledge | None = None) -> TransferReport:
+        """Run one full transfer session (probe phase + bulk phase).
+
+        ``cluster`` pins the session's knowledge snapshot; ``None`` queries
+        the DB here, which is identical as long as the DB is not refreshed
+        concurrently.  The fleet scheduler resolves the snapshot at admission
+        time (inside its simulated-time serializer) so sessions racing a
+        continuous refresh still see deterministic, fully-consistent
+        knowledge.
+        """
+        if cluster is None:
+            cluster = self.db.query(_request_features(env, dataset))
         records: list[SampleRecord] = []
         t0 = env.clock_s
         probe_mb = dataset.sample_chunks(self.bulk_chunks + self.max_samples)[0]
@@ -221,7 +231,13 @@ class AdaptiveSampler:
             else:
                 strikes = 0
         total_s = env.clock_s - t0
-        achieved_total = dataset.total_mb * 8.0 / max(total_s, 1e-9)
+        # Whole-transfer rate divides the MB actually moved: probes on a tiny
+        # dataset can exceed total_mb (then the bulk phase is empty and the
+        # session still moved sampled_mb), so the numerator must not be
+        # clamped to the dataset size.  In the normal remaining > 0 case the
+        # probes + bulk chunks add up to exactly total_mb.
+        moved_mb = max(dataset.total_mb, sampled_mb)
+        achieved_total = moved_mb * 8.0 / max(total_s, 1e-9)
         # Parameter changes = actual session switches the protocol paid for
         # (initial spawn + every consecutive-record parameter transition),
         # not distinct tuples — a probe revisiting an earlier tuple is a new

@@ -39,9 +39,10 @@ class CubicSpline1D:
         y = jnp.asarray(y, x.dtype)
         n = x.shape[0]
         if n == 1:
-            return cls(x, jnp.concatenate([y[None, :1] if y.ndim else y[None, None],
-                                           jnp.zeros((1, 3), x.dtype)], axis=-1)
-                       if False else jnp.array([[y[0], 0.0, 0.0, 0.0]], x.dtype))
+            # Single knot: the natural spline degenerates to the constant y_0.
+            return cls(x, jnp.stack([y[:1], jnp.zeros((1,), x.dtype),
+                                     jnp.zeros((1,), x.dtype),
+                                     jnp.zeros((1,), x.dtype)], axis=-1))
         if n == 2:
             slope = (y[1] - y[0]) / (x[1] - x[0])
             return cls(x, jnp.array([[y[0], slope, 0.0, 0.0]], x.dtype))

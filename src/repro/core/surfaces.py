@@ -130,10 +130,9 @@ def _aggregate_grid(entries: list[LogEntry]
     return gp, gcc, gpp, mean, cnt, rep_sigma
 
 
-def fit_surface(entries: list[LogEntry], load_intensity: float,
-                bounds: ParamBounds) -> ThroughputSurface:
-    gp, gcc, gpp, grid, cnt, rep_sigma = _aggregate_grid(entries)
-    surf = TricubicSurface.fit(gp, gcc, gpp, grid)
+def _finalize_surface(surf: TricubicSurface, entries: list[LogEntry],
+                      load_intensity: float, rep_sigma: float,
+                      bounds: ParamBounds) -> ThroughputSurface:
     # pooled sigma: replicate noise + *robust* residual scale (MAD) of raw
     # entries against the surface.  A plain RMSE would be inflated by the few
     # sparse-region misfits and make the confidence band useless for the
@@ -150,6 +149,58 @@ def fit_surface(entries: list[LogEntry], load_intensity: float,
                              load_intensity=float(load_intensity),
                              argmax_params=argmax_prm, max_throughput=max_th,
                              local_maxima=maxima, n_obs=len(entries))
+
+
+def fit_surface(entries: list[LogEntry], load_intensity: float,
+                bounds: ParamBounds) -> ThroughputSurface:
+    gp, gcc, gpp, grid, cnt, rep_sigma = _aggregate_grid(entries)
+    surf = TricubicSurface.fit(gp, gcc, gpp, grid)
+    return _finalize_surface(surf, entries, load_intensity, rep_sigma, bounds)
+
+
+def fit_surfaces_batched(jobs: list[tuple[list[LogEntry], float]],
+                         bounds: ParamBounds, *,
+                         use_pallas: bool = False) -> list[ThroughputSurface]:
+    """Fit one surface per ``(entries, load_intensity)`` job, with all jobs'
+    pp-direction tridiagonal solves batched through the vmapped Thomas
+    kernel (``kernels.ops.nat_spline_fit``; the Pallas kernel on TPU).
+
+    This is the continuous-refresh hot path: a fleet refresh refits every
+    touched (cluster, bin) surface at once, and the per-bin sequential numpy
+    ``nat_spline_coeffs`` calls dominate.  Rows sharing a knot vector are
+    stacked and solved in one call — one call total when the touched bins
+    share the observed pp grid, which is the common case.
+    """
+    from repro.kernels.ops import nat_spline_fit
+
+    aggs = [_aggregate_grid(entries) for entries, _ in jobs]
+    groups: dict[tuple, list[int]] = {}
+    for j, agg in enumerate(aggs):
+        groups.setdefault(tuple(agg[2]), []).append(j)
+    ppc: list[np.ndarray | None] = [None] * len(jobs)
+    for knots, idxs in groups.items():
+        gpp = np.asarray(knots, np.float64)
+        rows = [aggs[j][3].reshape(-1, len(knots)) for j in idxs]
+        Y = np.concatenate(rows, axis=0)
+        # Pad the row count up to a power-of-two bucket: every refresh batch
+        # has a different R, and letting each one trace a fresh XLA program
+        # would hand the compile time back many times over.
+        r_pad = max(64, 1 << int(np.ceil(np.log2(Y.shape[0]))))
+        if r_pad > Y.shape[0]:
+            Y = np.concatenate(
+                [Y, np.repeat(Y[-1:], r_pad - Y.shape[0], axis=0)], axis=0)
+        coeffs = np.asarray(
+            nat_spline_fit(gpp, Y, use_pallas=use_pallas), np.float64)
+        off = 0
+        for j, r in zip(idxs, rows):
+            ppc[j] = coeffs[off:off + r.shape[0]]
+            off += r.shape[0]
+    out = []
+    for (entries, load), (gp, gcc, gpp, grid, cnt, rep_sigma), c in zip(
+            jobs, aggs, ppc):
+        surf = TricubicSurface(gp, gcc, gpp, grid, c)
+        out.append(_finalize_surface(surf, entries, load, rep_sigma, bounds))
+    return out
 
 
 # ----------------------------------------------------------------------- #

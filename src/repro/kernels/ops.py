@@ -82,6 +82,22 @@ def transfer_predict_argmax(values, idx, *, use_pallas: bool = False,
     return ref.batched_predict_argmax_ref(values, idx)
 
 
+def nat_spline_fit(x, Y, *, use_pallas: bool = False,
+                   interpret: bool = False):
+    """Natural-cubic-spline coefficients for many rows over shared knots.
+
+    x: (N,) strictly increasing knots; Y: (R, N) values.  Returns
+    (R, N-1, 4) — the batched Thomas-solve twin of
+    ``core.spline.nat_spline_coeffs``, used by the continuous-refresh
+    subsystem to refit all touched (cluster, bin) spline rows in one call
+    (see ``core.surfaces.fit_surfaces_batched``).
+    """
+    if use_pallas:
+        from repro.kernels.spline_fit import nat_spline_fit_pallas
+        return nat_spline_fit_pallas(x, Y, interpret=interpret)
+    return ref.nat_spline_fit_ref(x, Y)
+
+
 def rwkv6_scan(r, k, v, w, u, *, chunk: int = 16, initial_state=None,
                return_state: bool = False, use_pallas: bool = False):
     """RWKV6 WKV over a sequence."""

@@ -323,6 +323,74 @@ def batched_predict_argmax_ref(values, idx):
     return jnp.max(scores, axis=-1), jnp.argmax(scores, axis=-1).astype(jnp.int32)
 
 
+# --------------------------------------------------------------------- #
+# batched natural-cubic-spline fit (offline refresh hot path)
+# --------------------------------------------------------------------- #
+@jax.jit
+def nat_spline_fit_ref(x, Y):
+    """Natural-cubic-spline coefficients for many rows via a Thomas solve.
+
+    x: (N,) strictly increasing knots; Y: (R, N) values.  Returns
+    (R, N-1, 4) local coefficients a + b t + c t^2 + d t^3 — the jnp twin of
+    ``repro.core.spline.nat_spline_coeffs``.  The tridiagonal system for the
+    interior second derivatives is shared across rows, so the Thomas
+    forward-elimination factors are computed once from ``x`` while the
+    per-row substitution sweeps run vectorized over all R rows inside
+    ``lax.scan`` (the "vmapped Thomas" refit of the continuous-refresh
+    subsystem).  Oracle for the Pallas kernel in ``kernels.spline_fit``.
+    """
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    x = jnp.asarray(x, dtype)
+    Y = jnp.atleast_2d(jnp.asarray(Y, dtype))
+    R, n = Y.shape
+    if n == 1:
+        return jnp.concatenate([Y[:, :, None], jnp.zeros((R, 1, 3), dtype)],
+                               axis=-1)
+    if n == 2:
+        slope = (Y[:, 1] - Y[:, 0]) / (x[1] - x[0])
+        zero = jnp.zeros((R,), dtype)
+        return jnp.stack([Y[:, 0], slope, zero, zero], axis=-1)[:, None, :]
+    h = jnp.diff(x)                                      # (N-1,)
+    # interior system over M_1..M_{n-2}; natural boundary M_0 = M_{n-1} = 0
+    sub = h[:-1]                                         # (m,) a_j, a_0 unused
+    diag = 2.0 * (h[:-1] + h[1:])                        # (m,)
+    sup = h[1:]                                          # (m,) c_{m-1} unused
+    rhs = 6.0 * ((Y[:, 2:] - Y[:, 1:-1]) / h[1:]
+                 - (Y[:, 1:-1] - Y[:, :-2]) / h[:-1])    # (R, m)
+
+    def fwd(carry, inp):
+        cp_prev, dp_prev = carry
+        a_j, b_j, c_j, d_j = inp                         # d_j: (R,)
+        denom = b_j - a_j * cp_prev
+        cp = c_j / denom
+        dp = (d_j - a_j * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    cp0 = sup[0] / diag[0]
+    dp0 = rhs[:, 0] / diag[0]
+    _, (cps, dps) = jax.lax.scan(
+        fwd, (cp0, dp0),
+        (sub[1:], diag[1:], sup[1:], jnp.moveaxis(rhs[:, 1:], 1, 0)))
+    cps = jnp.concatenate([cp0[None], cps])              # (m,)
+    dps = jnp.concatenate([dp0[None, :], dps])           # (m, R)
+
+    def bwd(m_next, inp):
+        cp_j, dp_j = inp
+        m_j = dp_j - cp_j * m_next
+        return m_j, m_j
+
+    _, interior = jax.lax.scan(bwd, dps[-1], (cps[:-1], dps[:-1]),
+                               reverse=True)
+    interior = jnp.concatenate([interior, dps[-1:]], axis=0)  # (m, R)
+    zeros = jnp.zeros((1, R), dtype)
+    M = jnp.moveaxis(jnp.concatenate([zeros, interior, zeros]), 1, 0)  # (R, N)
+    a = Y[:, :-1]
+    b = (Y[:, 1:] - Y[:, :-1]) / h - h * (2.0 * M[:, :-1] + M[:, 1:]) / 6.0
+    c = M[:, :-1] / 2.0
+    d = (M[:, 1:] - M[:, :-1]) / (6.0 * h)
+    return jnp.stack([a, b, c, d], axis=-1)
+
+
 def ssd_sequential_ref(x, dt, A, Bmat, Cmat, initial_state=None):
     """Token-by-token SSD oracle used to validate the chunked form."""
     Bsz, L, H, P = x.shape

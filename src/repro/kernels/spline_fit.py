@@ -1,0 +1,94 @@
+"""Batched natural-cubic-spline fitting for TPU (Pallas): Thomas solve.
+
+The continuous-refresh subsystem refits every touched (cluster, load-bin)
+surface at once, which reduces to fitting R spline rows over one shared knot
+vector (see ``core.surfaces.fit_surfaces_batched``).  The tridiagonal system
+for the interior second derivatives is identical for every row, so the kernel
+recomputes the (tiny, knot-only) Thomas elimination factors per block and
+runs the per-row substitution sweeps fully vectorized over a ``(RB, N)`` row
+tile in VMEM.  The knot count N is small (at most the pp-grid size, <= 16),
+so both sweeps are *statically unrolled* over columns — no dynamic lane
+indexing, just column reads/writes on the resident tile.  The XLA oracle is
+``kernels.ref.nat_spline_fit_ref`` and is the default compute path off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+
+def _fit_kernel(x_ref, y_ref, out_ref, *, n):
+    x = x_ref[...].astype(jnp.float32)  # (1, N)
+    y = y_ref[...].astype(jnp.float32)  # (RB, N)
+    h = [x[0, i + 1] - x[0, i] for i in range(n - 1)]
+    m = n - 2
+    # interior tridiagonal rows j = 0..m-1 (unknown M_{j+1}); natural
+    # boundary M_0 = M_{n-1} = 0
+    sub = [h[j] for j in range(m)]
+    diag = [2.0 * (h[j] + h[j + 1]) for j in range(m)]
+    sup = [h[j + 1] for j in range(m)]
+    rhs = [
+        6.0 * ((y[:, j + 2] - y[:, j + 1]) / h[j + 1] - (y[:, j + 1] - y[:, j]) / h[j])
+        for j in range(m)
+    ]
+    # Thomas forward sweep, statically unrolled (m <= 14)
+    cp = [sup[0] / diag[0]]
+    dp = [rhs[0] / diag[0]]
+    for j in range(1, m):
+        denom = diag[j] - sub[j] * cp[j - 1]
+        cp.append(sup[j] / denom)
+        dp.append((rhs[j] - sub[j] * dp[j - 1]) / denom)
+    # back substitution -> second derivatives M_0..M_{n-1} per row
+    interior = [dp[m - 1]]
+    for j in range(m - 2, -1, -1):
+        interior.insert(0, dp[j] - cp[j] * interior[0])
+    zero = jnp.zeros_like(y[:, 0])
+    big_m = [zero] + interior + [zero]  # length n, each (RB,)
+    cols = []
+    for i in range(n - 1):
+        a = y[:, i]
+        b = (y[:, i + 1] - y[:, i]) / h[i] - h[i] * (
+            2.0 * big_m[i] + big_m[i + 1]
+        ) / 6.0
+        c = big_m[i] / 2.0
+        d = (big_m[i + 1] - big_m[i]) / (6.0 * h[i])
+        cols.append(jnp.stack([a, b, c, d], axis=-1))  # (RB, 4)
+    out_ref[...] = jnp.stack(cols, axis=1)  # (RB, N-1, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("rb", "interpret"))
+def nat_spline_fit_pallas(x, Y, *, rb: int = 256, interpret: bool = False):
+    """x (N,), Y (R, N) -> natural-spline coefficients (R, N-1, 4), f32.
+
+    One grid step per ``rb``-row block; each block holds its ``(rb, N)`` row
+    tile and the shared knot vector in VMEM.  Degenerate knot counts (N <= 2)
+    have no tridiagonal system and fall through to the XLA oracle.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    Y = jnp.atleast_2d(jnp.asarray(Y, jnp.float32))
+    R, n = Y.shape
+    if n <= 2:
+        return ref.nat_spline_fit_ref(x, Y)
+    rb = min(rb, R)
+    pad = (-R) % rb
+    if pad:
+        Y = jnp.concatenate([Y, jnp.zeros((pad, n), Y.dtype)], axis=0)
+    kernel = functools.partial(_fit_kernel, n=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=((R + pad) // rb,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda r: (0, 0)),
+            pl.BlockSpec((rb, n), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, n - 1, 4), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R + pad, n - 1, 4), jnp.float32),
+        interpret=interpret,
+    )(x[None, :], Y)
+    return out[:R]

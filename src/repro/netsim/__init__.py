@@ -16,12 +16,12 @@ from repro.netsim.testbeds import (
     make_testbed, XSEDE, DIDCLAB, DIDCLAB_XSEDE, TESTBEDS,
 )
 from repro.netsim.workload import Dataset, make_dataset, FILE_CLASSES
-from repro.netsim.traffic import DiurnalTraffic, StepTraffic
+from repro.netsim.traffic import DiurnalTraffic, RegimeShiftTraffic, StepTraffic
 from repro.netsim.loggen import generate_history, LogEntry
 
 __all__ = [
     "Environment", "TransferParams", "ParamBounds", "SharedLink",
     "TenantEnvironment", "make_testbed", "XSEDE", "DIDCLAB", "DIDCLAB_XSEDE",
     "TESTBEDS", "Dataset", "make_dataset", "FILE_CLASSES", "DiurnalTraffic",
-    "StepTraffic", "generate_history", "LogEntry",
+    "RegimeShiftTraffic", "StepTraffic", "generate_history", "LogEntry",
 ]

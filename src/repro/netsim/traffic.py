@@ -74,3 +74,30 @@ class StepTraffic:
 
     def is_peak(self, t_s: float) -> bool:
         return self.load_at(t_s) >= 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class RegimeShiftTraffic:
+    """Abrupt mean-load regime change at ``shift_s`` — the paper's "harsh
+    network change" at fleet scale.  External load sits at ``before`` until
+    the shift instant, then jumps to ``after`` and stays there; an optional
+    sinusoidal ripple adds bounded variation around either level.
+
+    Deterministic and stateless (load is a pure function of t): one frozen
+    instance can be shared across fleet tenants, hashed into benchmark
+    caches, and replayed bit-for-bit — which is why the ripple is a sinusoid
+    rather than DiurnalTraffic's stateful random walk.
+    """
+    shift_s: float
+    before: float = 0.10
+    after: float = 0.60
+    ripple: float = 0.0              # peak amplitude of the sinusoidal ripple
+    ripple_period_s: float = 900.0
+
+    def load_at(self, t_s: float) -> float:
+        base = self.before if t_s < self.shift_s else self.after
+        wave = self.ripple * math.sin(2.0 * math.pi * t_s / self.ripple_period_s)
+        return float(min(max(base + wave, 0.0), 0.95))
+
+    def is_peak(self, t_s: float) -> bool:
+        return self.load_at(t_s) >= 0.5

@@ -90,6 +90,36 @@ def test_closest_surface_index_matches_scalar(cluster, direction, lighter):
         assert got[k] == want_idx
 
 
+@pytest.mark.parametrize("direction,lighter", [(-1, True), (1, False)])
+def test_closest_surface_index_empty_filter_fallback(cluster, direction, lighter):
+    """A direction filter that empties the candidate set (achieved below
+    every lighter prediction / above every heavier one) must fall back to
+    all surfaces, exactly like the scalar path's ``mid or cand`` branch."""
+    ck, _ = cluster
+    surfaces = ck.sorted_by_load()
+    pts = _int_points(16)
+    preds = np.array(
+        [[s.predict(TransferParams(*map(int, p))) for s in surfaces] for p in pts]
+    )
+    if direction < 0:
+        achieved = preds.min(axis=1) - 50.0  # below every lighter prediction
+    else:
+        achieved = preds.max(axis=1) + 50.0  # above every heavier prediction
+    got = np.asarray(
+        closest_surface_index(
+            jnp.asarray(preds, jnp.float32),
+            jnp.asarray(achieved, jnp.float32),
+            jnp.full(len(pts), direction, jnp.int32),
+        )
+    )
+    for k, (p, a) in enumerate(zip(pts, achieved)):
+        want = _closest_surface(
+            surfaces, TransferParams(*map(int, p)), a, lighter=lighter
+        )
+        want_idx = next(i for i, s in enumerate(surfaces) if s is want)
+        assert got[k] == want_idx
+
+
 def test_within_band_matches_scalar(cluster, stack):
     ck, _ = cluster
     surfaces = ck.sorted_by_load()

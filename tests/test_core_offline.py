@@ -179,8 +179,37 @@ def test_offline_db_additive_update(db, history):
     env = make_testbed("xsede", seed=11)
     fresh = generate_history(env, days=1, transfers_per_day=60, seed=42)
     before = [len(c.entries) for c in db.clusters]
-    db.update(fresh)
+    touched = db.update(fresh)
     after = [len(c.entries) for c in db.clusters]
     assert sum(after) == sum(before) + len(fresh)
+    assert touched and touched <= set(range(len(db.clusters)))
     for ck in db.clusters:
         assert ck.surfaces  # refit surfaces still present
+
+
+def test_offline_db_region_seed_persisted(db):
+    for k, ck in enumerate(db.clusters):
+        assert ck.region_seed == k  # offline_analysis seed=0 -> seed + k
+
+
+def test_refit_region_deterministic(history):
+    """A refit cluster's sampling region must equal a from-scratch region of
+    the same surfaces under the persisted per-cluster seed — the seed that
+    OfflineDB.update used to silently drop."""
+    from repro.core.regions import identify_sampling_regions
+
+    def refit():
+        d = offline_analysis(history, seed=0)
+        fresh = generate_history(make_testbed("xsede", seed=11), days=1,
+                                 transfers_per_day=60, seed=42)
+        return d, d.update(fresh)
+
+    (a, ta), (b, tb) = refit(), refit()
+    assert ta == tb
+    for k in ta:
+        # refit == refit across identical runs ...
+        assert a.clusters[k].region == b.clusters[k].region
+        # ... and refit == from-scratch under the persisted seed
+        want = identify_sampling_regions(a.clusters[k].surfaces, a.bounds,
+                                         seed=a.clusters[k].region_seed)
+        assert a.clusters[k].region == want

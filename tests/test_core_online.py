@@ -128,6 +128,35 @@ def test_ranking_matches_paper(tuner, xsede_history):
 
 
 # --------------------------- report hardening -------------------------- #
+def test_achieved_rate_uses_actual_mb_when_probes_exceed_dataset(tuner):
+    """Regression: probes on a tiny dataset can move more MB than the dataset
+    holds (the bulk phase then transfers nothing); the whole-transfer rate
+    must divide the MB actually moved, not ``dataset.total_mb``."""
+    import dataclasses as _dc
+    from repro.netsim.workload import Dataset
+
+    @_dc.dataclass(frozen=True)
+    class FatProbes(Dataset):
+        def sample_chunks(self, n_chunks):
+            # every probe moves the whole dataset again
+            return [self.total_mb] * n_chunks
+
+    ds = FatProbes("tiny", "small", avg_file_mb=2.0, n_files=4)  # 8 MB
+    rep = tuner.transfer(_fresh_env(), ds)
+    assert all(r.was_sample for r in rep.samples)  # bulk phase was empty
+    moved_mb = len(rep.samples) * ds.total_mb
+    assert moved_mb > ds.total_mb  # the premise: probes overshot the dataset
+    assert rep.achieved_mbps == pytest.approx(moved_mb * 8.0 / rep.total_s)
+
+
+def test_achieved_rate_unchanged_on_normal_datasets(tuner):
+    """The normal remaining > 0 path still divides exactly total_mb."""
+    ds = make_dataset("medium", 7)
+    rep = tuner.transfer(_fresh_env(), ds)
+    assert any(not r.was_sample for r in rep.samples)
+    assert rep.achieved_mbps == ds.total_mb * 8.0 / rep.total_s
+
+
 def test_report_degenerate_records_well_defined():
     """Empty-bulk and zero-duration records must not blow up the report."""
     from repro.core.online import SampleRecord, TransferReport

@@ -166,3 +166,57 @@ def test_ssd_decode_step_matches_scan_tail():
                                atol=1e-4, rtol=1e-3)
     np.testing.assert_allclose(np.asarray(state_t), np.asarray(state),
                                atol=1e-4, rtol=1e-3)
+
+
+# --------------------- batched natural-spline fit ---------------------- #
+def _spline_knots(n):
+    return np.sort(RNG.choice(np.arange(1.0, 33.0), size=n, replace=False))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 9, 16])
+def test_nat_spline_fit_ref_matches_numpy(n):
+    """Acceptance: the vmapped Thomas solve matches the numpy offline-refit
+    path (``spline.nat_spline_coeffs``) to <= 1e-5."""
+    from repro.core.spline import nat_spline_coeffs
+
+    x = _spline_knots(n)
+    Y = RNG.normal(size=(37, n))
+    want = nat_spline_coeffs(x, Y)
+    got = np.asarray(ref.nat_spline_fit_ref(x, Y))
+    assert got.shape == (37, max(n - 1, 1), 4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [3, 5, 16])
+def test_nat_spline_fit_pallas_matches_ref(n):
+    from repro.kernels.spline_fit import nat_spline_fit_pallas
+
+    x = _spline_knots(n)
+    Y = RNG.normal(size=(37, n))  # 37 rows: exercises the padding path
+    want = np.asarray(ref.nat_spline_fit_ref(x, Y))
+    got = np.asarray(nat_spline_fit_pallas(x, Y, rb=16, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_nat_spline_fit_pallas_degenerate_knots_delegate():
+    from repro.kernels.spline_fit import nat_spline_fit_pallas
+    from repro.core.spline import nat_spline_coeffs
+
+    for n in (1, 2):
+        x = _spline_knots(n)
+        Y = RNG.normal(size=(5, n))
+        got = np.asarray(nat_spline_fit_pallas(x, Y, interpret=True))
+        np.testing.assert_allclose(got, nat_spline_coeffs(x, Y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_nat_spline_fit_coeffs_interpolate_knots():
+    """The fitted coefficients reproduce every data point exactly."""
+    from repro.core.spline import nat_spline_eval
+    from repro.kernels.ops import nat_spline_fit
+
+    x = np.array([1.0, 3.0, 4.0, 9.0, 12.0, 16.0])
+    Y = RNG.normal(size=(5, 6))
+    coeffs = np.asarray(nat_spline_fit(x, Y), np.float64)
+    got = nat_spline_eval(x, coeffs, x)
+    np.testing.assert_allclose(got, Y, rtol=1e-4, atol=1e-4)

@@ -115,3 +115,22 @@ def test_optimal_grid_search_consistency():
     for cand in [TransferParams(4, 4, 4), TransferParams(8, 2, 16),
                  TransferParams(16, 16, 16), TransferParams(1, 1, 1)]:
         assert env.mean_throughput(cand, ds.avg_file_mb, ds.n_files, 0.2) <= th + 1e-9
+
+
+def test_regime_shift_traffic_deterministic_step():
+    from repro.netsim import RegimeShiftTraffic
+
+    tr = RegimeShiftTraffic(shift_s=1000.0, before=0.1, after=0.6)
+    assert tr.load_at(0.0) == 0.1
+    assert tr.load_at(999.9) == 0.1
+    assert tr.load_at(1000.0) == 0.6
+    assert tr.load_at(5e6) == 0.6
+    assert not tr.is_peak(500.0) and tr.is_peak(1500.0)
+    # pure function of t: replays identically, hashable for benchmark caches
+    assert tr.load_at(777.0) == tr.load_at(777.0)
+    assert hash(tr) == hash(RegimeShiftTraffic(shift_s=1000.0, before=0.1,
+                                               after=0.6))
+    rippled = RegimeShiftTraffic(shift_s=1000.0, before=0.05, after=0.9,
+                                 ripple=0.1)
+    for t in (0.0, 250.0, 900.0, 1100.0, 3600.0):
+        assert 0.0 <= rippled.load_at(t) <= 0.95

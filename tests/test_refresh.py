@@ -1,0 +1,288 @@
+"""Continuous knowledge refresh: session-log conversion, cadence, atomic
+cluster swaps, batched-refit parity, and fleet integration (refresh=off must
+reproduce refresh-free fleet runs bit-for-bit)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveSampler,
+    FleetConfig,
+    FleetRequest,
+    FleetScheduler,
+    KnowledgeRefresher,
+    RefreshConfig,
+    TransferTuner,
+    TunerConfig,
+    session_log_entries,
+)
+from repro.core.offline import offline_analysis
+from repro.netsim import (
+    XSEDE,
+    DiurnalTraffic,
+    Environment,
+    generate_history,
+    make_dataset,
+    make_testbed,
+)
+
+START = 4 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def history():
+    env = make_testbed("xsede", seed=3)
+    return generate_history(env, days=4, transfers_per_day=120, seed=0)
+
+
+def _db(history, seed=0):
+    return TransferTuner(TunerConfig(seed=seed)).fit(history).db
+
+
+@pytest.fixture()
+def db(history):
+    # function-scoped: refresh tests mutate the DB
+    return _db(history)
+
+
+def _session(db, seed=99, file_class="medium", ds_seed=7):
+    env = make_testbed("xsede", seed=seed)
+    env.clock_s = START
+    ds = make_dataset(file_class, ds_seed)
+    report = AdaptiveSampler(db).transfer(env, ds)
+    return report, ds, env.clock_s
+
+
+# ------------------------- session -> log entries ---------------------- #
+def test_session_log_entries_schema_and_routing(db):
+    report, ds, end_s = _session(db)
+    entries = session_log_entries(report, XSEDE, ds, end_clock_s=end_s)
+    bulk = [r for r in report.samples if not r.was_sample]
+    assert len(entries) == len(bulk)
+    for e, r in zip(entries, bulk):
+        assert e.throughput_mbps == pytest.approx(r.achieved)
+        assert (e.cc, e.p, e.pp) == r.params.as_tuple()
+        assert e.avg_file_mb == ds.avg_file_mb and e.n_files == ds.n_files
+    # timestamps walk the bulk chunk durations, ending at the session end
+    ts = [e.timestamp_s for e in entries]
+    assert ts == sorted(ts)
+    assert ts[0] >= START
+    assert ts[-1] + bulk[-1].elapsed_s == pytest.approx(end_s)
+    # entries route back to the cluster the session queried
+    k_req = int(db.cluster_model.assign(entries[0].features()))
+    from repro.core.online import request_features
+
+    assert k_req == int(db.cluster_model.assign(request_features(XSEDE, ds)))
+
+
+def test_session_log_entries_excludes_probes(db):
+    report, ds, end_s = _session(db)
+    entries = session_log_entries(report, XSEDE, ds, end_clock_s=end_s)
+    assert len(entries) < len(report.samples)  # probes dropped
+    assert report.n_samples >= 1
+
+
+# ----------------------------- refresher ------------------------------- #
+def test_refresher_completion_cadence(db):
+    ref = KnowledgeRefresher(
+        db, XSEDE, RefreshConfig(every_completions=3, min_entries=1)
+    )
+    fired = []
+    for i in range(6):
+        report, ds, end_s = _session(db, seed=100 + i, ds_seed=10 + i)
+        fired.append(ref.observe(report, ds, now_s=end_s))
+    assert fired == [False, False, True, False, False, True]
+    assert ref.refreshes == 2
+    assert ref.entries_folded > 0
+    assert ref.pending_entries == 0
+
+
+def test_refresher_min_entries_defers(db):
+    ref = KnowledgeRefresher(
+        db, XSEDE, RefreshConfig(every_completions=1, min_entries=10**6)
+    )
+    report, ds, end_s = _session(db)
+    assert not ref.observe(report, ds, now_s=end_s)
+    assert ref.refreshes == 0 and ref.pending_entries > 0
+
+
+def test_refresher_sim_time_cadence(db):
+    ref = KnowledgeRefresher(
+        db,
+        XSEDE,
+        RefreshConfig(every_completions=0, every_sim_s=500.0, min_entries=1),
+    )
+    report, ds, end_s = _session(db)
+    assert ref.observe(report, ds, now_s=1000.0)  # first is always due
+    report2, ds2, _ = _session(db, seed=101, ds_seed=11)
+    assert not ref.observe(report2, ds2, now_s=1100.0)  # within the period
+    report3, ds3, _ = _session(db, seed=102, ds_seed=12)
+    assert ref.observe(report3, ds3, now_s=1600.0)
+
+
+def test_refresher_staleness_tracking(db):
+    ref = KnowledgeRefresher(
+        db, XSEDE, RefreshConfig(every_completions=1, min_entries=1)
+    )
+    assert ref.stalest_cluster_s(123.0) == float("inf")
+    report, ds, end_s = _session(db)
+    ref.observe(report, ds, now_s=end_s)
+    touched = [k for k, s in ref.staleness.items() if s.refreshes == 1]
+    assert touched
+    for k in touched:
+        assert ref.staleness[k].entries_since_refresh == 0
+        assert ref.staleness[k].staleness_s(end_s + 50.0) == pytest.approx(50.0)
+
+
+# ------------------------ atomic swap + parity ------------------------- #
+def test_update_swaps_clusters_atomically(db, history):
+    fresh = generate_history(
+        make_testbed("xsede", seed=11), days=1, transfers_per_day=60, seed=42
+    )
+    old = list(db.clusters)
+    old_surfaces = [c.surfaces for c in db.clusters]
+    db.clusters[0].surface_stack(db.bounds)  # warm one batched view
+    touched = db.update(fresh)
+    assert touched  # fresh logs must refit something
+    for k in touched:
+        # readers holding the old object keep a fully consistent snapshot
+        assert db.clusters[k] is not old[k]
+        assert old[k].surfaces is old_surfaces[k]
+        assert db.clusters[k].surfaces is not old_surfaces[k]
+        assert db.clusters[k].region_seed == old[k].region_seed
+    if 0 in touched:
+        assert db.clusters[0]._stack is not None  # pre-warmed before publish
+
+
+def test_surface_stack_matches_fresh_dense_eval_after_update(db):
+    fresh = generate_history(
+        make_testbed("xsede", seed=11), days=1, transfers_per_day=60, seed=42
+    )
+    touched = db.update(fresh)
+    axes = (
+        np.arange(1.0, db.bounds.max_p + 1.0),
+        np.arange(1.0, db.bounds.max_cc + 1.0),
+        np.arange(1.0, db.bounds.max_pp + 1.0),
+    )
+    for k in touched:
+        ck = db.clusters[k]
+        stack = ck.surface_stack(db.bounds)
+        got = np.asarray(stack.values)
+        want = np.stack([s.surface.dense_eval(*axes) for s in ck.sorted_by_load()])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_batched_refit_matches_scalar_refit(history):
+    a = _db(history)
+    b = _db(history)
+    fresh = generate_history(
+        make_testbed("xsede", seed=11), days=1, transfers_per_day=60, seed=42
+    )
+    ta = a.update(fresh, batched_fit=False)
+    tb = b.update(fresh, batched_fit=True)
+    assert ta == tb
+    g = np.arange(1.0, 17.0)
+    for k in ta:
+        sa = a.clusters[k].sorted_by_load()
+        sb = b.clusters[k].sorted_by_load()
+        assert len(sa) == len(sb)
+        for x, y in zip(sa, sb):
+            assert x.load_intensity == pytest.approx(y.load_intensity)
+            da, dby = x.surface.dense_eval(g, g, g), y.surface.dense_eval(g, g, g)
+            rel = np.abs(da - dby) / np.maximum(np.abs(da), 1.0)
+            assert rel.max() < 1e-4
+
+
+def test_refresh_learns_new_load_regime(history):
+    """After folding heavy-load observations in, the refit cluster predicts
+    the unseen regime better — the drift benchmark's claim in miniature."""
+    db = _db(history)
+    heavy_env = Environment(
+        XSEDE, DiurnalTraffic.constant(0.6), noise_sigma=0.03, seed=77
+    )
+    heavy = generate_history(heavy_env, days=0.5, transfers_per_day=200, seed=55)
+
+    def err(d):
+        out = []
+        for e in heavy:
+            ck = d.query(e.features())
+            s = ck.sorted_by_load()[-1]  # heaviest knowledge available
+            out.append(abs(float(s.surface(e.p, e.cc, e.pp)) - e.throughput_mbps))
+        return float(np.median(out))
+
+    before = err(db)
+    db.update(heavy, batched_fit=True)
+    after = err(db)
+    assert after < before
+
+
+# --------------------------- fleet integration ------------------------- #
+def _reqs():
+    return [
+        FleetRequest(
+            dataset=make_dataset("medium", 30 + i),
+            env_seed=200 + i,
+            start_clock_s=START,
+            constant_load=0.15,
+        )
+        for i in range(5)
+    ]
+
+
+def test_fleet_refresh_off_bit_for_bit(db):
+    """refresh=None and a never-firing refresher reproduce the refresh-free
+    fleet run bit-for-bit (the PR 2 behaviour)."""
+    base = FleetScheduler(db, config=FleetConfig(max_concurrent=5)).run(_reqs())
+    never = FleetScheduler(
+        db,
+        config=FleetConfig(
+            max_concurrent=5,
+            refresh=RefreshConfig(every_completions=10**9, min_entries=10**9),
+        ),
+    ).run(_reqs())
+    assert base == never  # bit-for-bit, including every TransferReport
+
+
+def test_fleet_refresh_on_deterministic(history):
+    def go():
+        cfg = FleetConfig(
+            max_concurrent=2,
+            refresh=RefreshConfig(every_completions=2, min_entries=4),
+        )
+        return FleetScheduler(_db(history), config=cfg).run(_reqs())
+
+    a, b = go(), go()
+    assert a.refreshes > 0 and a.refreshed_entries > 0
+    assert a == b
+    assert len(a.reports) == 5
+
+
+def test_fleet_refresh_sessions_snapshot_consistent_knowledge(history):
+    """Queued sessions admitted after a refresh must use post-refresh
+    knowledge (snapshot resolved at admission, inside the serialized turn)."""
+    import itertools
+
+    db = _db(history)
+    snapshots = []
+    orig_query = db.query
+
+    def recording_query(features):
+        snapshots.append(orig_query(features))
+        return snapshots[-1]
+
+    db.query = recording_query
+    cfg = FleetConfig(
+        max_concurrent=1,  # strictly serial: every later admit follows a
+        refresh=RefreshConfig(every_completions=1, min_entries=1),  # refresh
+    )
+    report = FleetScheduler(db, config=cfg).run(_reqs())
+    assert report.refreshes >= 4  # one per completion except possibly the last
+    assert all(r is not None for r in report.reports)
+    # the scheduler resolved one snapshot per admission ...
+    assert len(snapshots) == len(report.reports)
+    # ... and a later admission of the same cluster saw the *refreshed*
+    # object, not the one handed to earlier sessions (atomic swap observed)
+    assert any(
+        a is not b and np.array_equal(a.centroid, b.centroid)
+        for a, b in itertools.combinations(snapshots, 2)
+    )

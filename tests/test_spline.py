@@ -63,6 +63,35 @@ def test_spline_c2_continuity(n, seed):
         np.testing.assert_allclose(left_d2, right_d2, rtol=1e-6, atol=1e-6)
 
 
+def test_cubic1d_degenerate_knot_counts():
+    """n==1 and n==2 knot paths (exercised by sparse refresh bins): constant
+    and straight-line interpolants with the standard (1, 4) coefficient row."""
+    one = CubicSpline1D.fit(np.array([4.0]), np.array([7.0]))
+    assert one.coeffs.shape == (1, 4)
+    for q in (0.0, 4.0, 11.0):
+        assert abs(float(one(q)) - 7.0) < 1e-6
+
+    two = CubicSpline1D.fit(np.array([2.0, 6.0]), np.array([1.0, 9.0]))
+    assert two.coeffs.shape == (1, 4)
+    for q, want in ((2.0, 1.0), (4.0, 5.0), (6.0, 9.0)):
+        assert abs(float(two(q)) - want) < 1e-6
+
+
+def test_cubic1d_single_knot_fit_is_traceable():
+    """The n==1 branch must build its coefficients from traced values (the
+    old dead-expression branch materialized a concrete list), so it works
+    under vmap/jit like every other knot count."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.array([3.0])
+    ys = jnp.arange(5.0)[:, None]
+    coeffs = jax.vmap(lambda y: CubicSpline1D.fit(x, y).coeffs)(ys)
+    assert coeffs.shape == (5, 1, 4)
+    np.testing.assert_allclose(np.asarray(coeffs[:, 0, 0]), np.arange(5.0))
+    np.testing.assert_allclose(np.asarray(coeffs[:, 0, 1:]), 0.0)
+
+
 def test_bicubic_hits_grid_nodes():
     rng = np.random.default_rng(1)
     gx = np.array([1.0, 2.0, 4.0, 8.0])
