@@ -1,0 +1,189 @@
+"""Offline knowledge discovery at scale: batched clustering + cold-start.
+
+Two halves, matching the two halves of the scaled offline subsystem:
+
+* **Clustering scale sweep** — cluster n in {1e3, 1e4, 1e5, 1e6} log rows
+  (the realistic multi-testbed feature distribution from
+  ``netsim.loggen.sample_feature_logs``) with the pure-numpy exact path and
+  the batched JAX path, both sweeping the same model-order range.  Reports
+  wall time, the selected order, the speedup, and two fidelity numbers: the
+  as-run label agreement between the two sweeps (init-lottery sensitive on
+  elongated log-uniform clusters, reported for honesty) and the fixed-point
+  agreement — exact numpy Lloyd polished *from the batched centroids* vs
+  the batched labels, which isolates computation fidelity from seeding
+  luck.  Both agreements are optimal-permutation matched.
+
+* **Cross-network cold-start** — mine per-network knowledge from two
+  testbeds' histories, then stand up a third, unseen network twice: once
+  bootstrapped from the *closest* known network (centroid distance over
+  ``LogEntry.features()``; capacity-rescaled donor surfaces) and once from
+  the farthest — the uninformed choice a similarity-blind bootstrap could
+  just as well make.  Both copies then specialize through the ordinary
+  refresh loop over the same session schedule, and are scored on the
+  new network's own held-out probe log (Eq. 25 surface accuracy) at the
+  start and end of the first refresh window, plus steady-rate accuracy
+  vs the single-tenant optimum.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    AdaptiveSampler,
+    KnowledgeRefresher,
+    MultiNetworkDB,
+    RefreshConfig,
+    kmeans,
+    label_agreement,
+)
+from repro.core.clustering import fit_clusters
+from repro.core.surfaces import surface_accuracy
+from repro.netsim import (
+    ParamBounds,
+    features_of,
+    generate_history,
+    generate_multi_network_history,
+    make_dataset,
+    make_testbed,
+    sample_feature_logs,
+)
+
+# Wide enough to resolve the 9 natural blobs (3 testbeds x 3 file classes).
+M_RANGE = range(4, 13)
+NS_FULL = [1_000, 10_000, 100_000, 1_000_000]
+NS_SMOKE = [1_000, 10_000, 100_000]
+NEW_NET = "didclab-xsede"
+
+
+def run_scale(smoke: bool = False) -> list[dict]:
+    out = []
+    for n in NS_SMOKE if smoke else NS_FULL:
+        X = sample_feature_logs(n, seed=7)
+        # steady-state timing: one warmup run absorbs the per-shape XLA
+        # compile, which a continuously-refreshing deployment pays once
+        fit_clusters(X, m_range=M_RANGE, seed=0, batched=True)
+        t0 = time.perf_counter()
+        cmb = fit_clusters(X, m_range=M_RANGE, seed=0, batched=True)
+        wall_b = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cmn = fit_clusters(X, m_range=M_RANGE, seed=0, batched=False)
+        wall_n = time.perf_counter() - t0
+        polished, _ = kmeans(X, cmb.m, init=cmb.centroids)
+        row = {
+            "n": n,
+            "wall_batched_us": wall_b * 1e6,
+            "wall_numpy_us": wall_n * 1e6,
+            "speedup": wall_n / max(wall_b, 1e-12),
+            "m_batched": cmb.m,
+            "m_numpy": cmn.m,
+            "agree_sweep": label_agreement(cmb.labels, cmn.labels),
+            "agree_fixed_point": label_agreement(cmb.labels, polished),
+        }
+        out.append(row)
+    return out
+
+
+def _db_accuracy(db, entries) -> float:
+    """Eq. 25 accuracy of the DB's median-load surfaces on probe entries."""
+    by_cluster: dict[int, list] = {}
+    for e in entries:
+        by_cluster.setdefault(db.cluster_model.assign(e.features()), []).append(e)
+    num = den = 0.0
+    for k, sel in by_cluster.items():
+        surfaces = db.clusters[k].sorted_by_load()
+        s = surfaces[len(surfaces) // 2]
+        num += len(sel) * surface_accuracy(s, sel)
+        den += len(sel)
+    return num / max(den, 1.0)
+
+
+def run_cold_start(smoke: bool = False) -> dict:
+    days, per_day = (2, 100) if smoke else (4, 150)
+    n_sessions = 6 if smoke else 10
+    hist = generate_multi_network_history(
+        ["xsede", "didclab"], days=days, transfers_per_day=per_day, seed=5
+    )
+    probe = generate_history(
+        make_testbed(NEW_NET, seed=33),
+        days=1,
+        transfers_per_day=120,
+        seed=77,
+        src="new/a",
+        dst="new/b",
+    )
+    env0 = make_testbed(NEW_NET, seed=9)
+    ds0 = make_dataset("medium", 11)
+    feats = features_of(
+        env0.link.bandwidth_mbps, env0.link.rtt_s, ds0.avg_file_mb, ds0.n_files
+    )
+    out: dict = {}
+    mdb = MultiNetworkDB(seed=0).fit(hist)
+    for policy in ("nearest", "uninformed"):
+        ranked = mdb.rank_networks(feats)
+        donor = ranked[0][0] if policy == "nearest" else ranked[-1][0]
+        t0 = time.perf_counter()
+        db = mdb.bootstrap("new/a", "new/b", feats, donor=donor, register=False)
+        refresher = KnowledgeRefresher(
+            db, env0.link, RefreshConfig(every_completions=2, min_entries=4)
+        )
+        acc_start = _db_accuracy(db, probe)
+        steadies = []
+        for s in range(n_sessions):
+            ds = make_dataset(["medium", "large", "small"][s % 3], 40 + s)
+            env = make_testbed(NEW_NET, seed=9 + s)
+            env.clock_s = 3600.0 + 500.0 * s
+            rep = AdaptiveSampler(db).transfer(env, ds)
+            opt_env = make_testbed(NEW_NET, seed=9 + s)
+            opt_env.clock_s = 3600.0 + 500.0 * s
+            _, opt = opt_env.optimal(ParamBounds(), ds.avg_file_mb, ds.n_files)
+            steadies.append(100.0 * min(rep.steady_mbps, opt) / max(opt, 1e-9))
+            # transfer() leaves env.clock_s at the session's end time
+            refresher.observe(rep, ds, now_s=env.clock_s)
+        out[policy] = {
+            "donor": donor[0].split("/")[0],
+            "wall_us": (time.perf_counter() - t0) * 1e6,
+            "acc_start": acc_start,
+            "acc_end": _db_accuracy(db, probe),
+            "steady_acc": float(np.mean(steadies)),
+            "refreshes": refresher.refreshes,
+        }
+    return out
+
+
+def main(smoke: bool = False):
+    rows = run_scale(smoke)
+    for r in rows:
+        print(
+            f"offline_scale_numpy_n{r['n']},{r['wall_numpy_us']:.0f},"
+            f"m={r['m_numpy']}"
+        )
+        print(
+            f"offline_scale_batched_n{r['n']},{r['wall_batched_us']:.0f},"
+            f"m={r['m_batched']} speedup={r['speedup']:.1f}x "
+            f"agree_fixed_point={100.0 * r['agree_fixed_point']:.1f}% "
+            f"agree_sweep={100.0 * r['agree_sweep']:.1f}%"
+        )
+    cold = run_cold_start(smoke)
+    for policy in ("nearest", "uninformed"):
+        c = cold[policy]
+        print(
+            f"offline_coldstart_{policy},{c['wall_us']:.0f},"
+            f"donor={c['donor']} acc_start={c['acc_start']:.1f}% "
+            f"acc_end={c['acc_end']:.1f}% steady_acc={c['steady_acc']:.1f}% "
+            f"refreshes={c['refreshes']}"
+        )
+    d_start = cold["nearest"]["acc_start"] - cold["uninformed"]["acc_start"]
+    d_end = cold["nearest"]["acc_end"] - cold["uninformed"]["acc_end"]
+    d_steady = cold["nearest"]["steady_acc"] - cold["uninformed"]["steady_acc"]
+    print(
+        f"offline_coldstart_gain,0,pred_delta_start={d_start:+.1f}pts "
+        f"pred_delta_end={d_end:+.1f}pts steady_delta={d_steady:+.1f}pts"
+    )
+    return {"scale": rows, "cold_start": cold}
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ MODULES = [
     ("kernels", "benchmarks.kernels_bench"),
     ("fleet", "benchmarks.fleet_scale"),
     ("refresh", "benchmarks.refresh_drift"),
+    ("offline", "benchmarks.offline_scale"),
 ]
 
 

@@ -3,17 +3,21 @@ transfer logs + online adaptive sampling for protocol-parameter tuning."""
 from repro.core.spline import (
     CubicSpline1D, BicubicSpline, TricubicSurface, PolySurface,
 )
-from repro.core.clustering import fit_clusters, kmeans, hac_upgma, ch_index
+from repro.core.clustering import (
+    fit_clusters, fit_clusters_batched, kmeans, hac_upgma, ch_index,
+    label_agreement,
+)
 from repro.core.contention import load_intensity, intensity_bins
 from repro.core.surfaces import ThroughputSurface, fit_surface, surface_accuracy
 from repro.core.maxima import find_local_maxima, integer_argmax
 from repro.core.regions import identify_sampling_regions, SamplingRegion
-from repro.core.offline import OfflineDB, offline_analysis
+from repro.core.offline import MultiNetworkDB, OfflineDB, offline_analysis
 from repro.core.online import AdaptiveSampler, TransferReport
 from repro.core.tuner import TransferTuner, TunerConfig
 from repro.core.batched import SurfaceStack
 from repro.core.refresh import (
-    ClusterStaleness, KnowledgeRefresher, RefreshConfig, session_log_entries,
+    ClusterStaleness, KnowledgeRefresher, MultiNetworkRefresher,
+    RefreshConfig, session_log_entries,
 )
 from repro.core.fleet import (
     FleetConfig, FleetReport, FleetRequest, FleetScheduler, ReprobeLimiter,
@@ -21,12 +25,14 @@ from repro.core.fleet import (
 
 __all__ = [
     "CubicSpline1D", "BicubicSpline", "TricubicSurface", "PolySurface",
-    "fit_clusters", "kmeans", "hac_upgma", "ch_index", "load_intensity",
-    "intensity_bins", "ThroughputSurface", "fit_surface", "surface_accuracy",
+    "fit_clusters", "fit_clusters_batched", "kmeans", "hac_upgma", "ch_index",
+    "label_agreement", "load_intensity", "intensity_bins",
+    "ThroughputSurface", "fit_surface", "surface_accuracy",
     "find_local_maxima", "integer_argmax", "identify_sampling_regions",
-    "SamplingRegion", "OfflineDB", "offline_analysis", "AdaptiveSampler",
-    "TransferReport", "TransferTuner", "TunerConfig", "SurfaceStack",
-    "ClusterStaleness", "KnowledgeRefresher", "RefreshConfig",
-    "session_log_entries", "FleetConfig", "FleetReport", "FleetRequest",
-    "FleetScheduler", "ReprobeLimiter",
+    "SamplingRegion", "MultiNetworkDB", "OfflineDB", "offline_analysis",
+    "AdaptiveSampler", "TransferReport", "TransferTuner", "TunerConfig",
+    "SurfaceStack", "ClusterStaleness", "KnowledgeRefresher",
+    "MultiNetworkRefresher", "RefreshConfig", "session_log_entries",
+    "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
+    "ReprobeLimiter",
 ]

@@ -24,7 +24,7 @@ from repro.core.contention import (
 )
 from repro.core.regions import SamplingRegion, identify_sampling_regions
 from repro.core.surfaces import (
-    ThroughputSurface, fit_surface, fit_surfaces_batched,
+    ThroughputSurface, fit_surface, fit_surfaces_batched, scale_surface,
 )
 from repro.netsim.environment import ParamBounds
 from repro.netsim.loggen import LogEntry
@@ -64,6 +64,9 @@ class OfflineDB:
     bounds: ParamBounds
     n_load_bins: int
     fit_seconds: float
+    # endpoint pair this knowledge was bootstrapped from (cross-network
+    # cold-start provenance); None for knowledge mined from own history
+    origin: tuple[str, str] | None = None
 
     # ------------------------------------------------------------------ #
     def query(self, features: np.ndarray) -> ClusterKnowledge:
@@ -93,8 +96,15 @@ class OfflineDB:
         cluster indices.
         """
         if assignments is None:
-            assignments = [int(self.cluster_model.assign(e.features()))
-                           for e in new_entries]
+            if len(new_entries) >= 512:
+                # million-entry refreshes route through the tiled
+                # nearest-centroid kernel instead of a Python loop
+                F = np.stack([e.features() for e in new_entries])
+                assignments = self.cluster_model.assign_many(
+                    F, use_pallas=use_pallas).tolist()
+            else:
+                assignments = [int(self.cluster_model.assign(e.features()))
+                               for e in new_entries]
         touched = set()
         for e, k in zip(new_entries, assignments):
             self.clusters[k].entries.append(e)
@@ -151,11 +161,19 @@ def offline_analysis(entries: list[LogEntry], *,
                      bounds: ParamBounds = ParamBounds(),
                      n_load_bins: int = 5,
                      clustering: str = "kmeans++",
-                     seed: int = 0) -> OfflineDB:
-    """Full offline phase over a historical log."""
+                     seed: int = 0,
+                     batched: bool | None = None,
+                     use_pallas: bool = False) -> OfflineDB:
+    """Full offline phase over a historical log.
+
+    ``batched=None`` lets ``fit_clusters`` auto-route k-means++ to the
+    batched JAX path above ``clustering.BATCHED_THRESHOLD`` rows, so
+    million-entry logs never hit the O(n^2)/Python-loop numpy path.
+    """
     t0 = time.perf_counter()
     X = np.stack([e.features() for e in entries])
-    cm = fit_clusters(X, method=clustering, seed=seed)
+    cm = fit_clusters(X, method=clustering, seed=seed, batched=batched,
+                      use_pallas=use_pallas)
     clusters: list[ClusterKnowledge] = []
     for k in range(cm.m):
         sel = [e for e, l in zip(entries, cm.labels) if l == k]
@@ -167,3 +185,136 @@ def offline_analysis(entries: list[LogEntry], *,
                                          sel, region_seed=seed + k))
     return OfflineDB(clusters, cm, bounds, n_load_bins,
                      time.perf_counter() - t0)
+
+
+# --------------------------------------------------------------------- #
+# multi-network knowledge: per-endpoint-pair stores + cold-start transfer
+# --------------------------------------------------------------------- #
+def _bootstrap_clone(donor: OfflineDB, origin: tuple[str, str],
+                     features: np.ndarray) -> OfflineDB:
+    """Independent knowledge for a new network, transferred from a donor.
+
+    The donor's surfaces are re-anchored at the target link: throughput is
+    rescaled by the capacity ratio ``10**(bw_target - bw_donor)`` read off
+    the log-bandwidth feature (the parameter *response shape* — which
+    (cc, p, pp) help and by how much, relative to capacity — is what
+    transfers across networks; absolute rates do not), and the cluster
+    centroids' link coordinates move to the target's so future routing and
+    similarity ranking see the network where it actually lives.  The entry
+    stores start *empty*: donor observations describe another network's
+    throughput axis, so the first additive refits specialize each touched
+    cluster from the new network's own logs alone, while the scaled donor
+    surfaces serve as the prior until then.  The donor itself is never
+    mutated.
+    """
+    F = np.atleast_2d(np.asarray(features, np.float64))
+    bw_t, rtt_t = float(np.median(F[:, 0])), float(np.median(F[:, 1]))
+    clusters = []
+    for ck in donor.clusters:
+        s = float(10.0 ** np.clip(bw_t - ck.centroid[0], -3.0, 3.0))
+        cen = ck.centroid.copy()
+        cen[0], cen[1] = bw_t, rtt_t
+        clusters.append(ClusterKnowledge(
+            cen, [scale_surface(ts, s) for ts in ck.surfaces], ck.region,
+            [], region_seed=ck.region_seed))
+    cm = donor.cluster_model
+    cents = cm.centroids.copy()
+    cents[:, 0], cents[:, 1] = bw_t, rtt_t
+    model = ClusterModel(cm.labels.copy(), cents, cm.m, cm.method, cm.ch)
+    return OfflineDB(clusters, model, donor.bounds, donor.n_load_bins,
+                     0.0, origin=origin)
+
+
+@dataclasses.dataclass
+class MultiNetworkDB:
+    """Per-testbed offline knowledge keyed by endpoint pair (Sec. 3.1's
+    "network and data agnostic" claim, made operational).
+
+    Each (src, dst) endpoint pair gets its own ``OfflineDB`` mined from its
+    own history.  A pair with *no* history cold-starts from the closest
+    known network — smallest mean distance from the requester's feature
+    vectors to the candidate store's cluster centroids over
+    ``LogEntry.features()`` space — and then specializes via the ordinary
+    additive refresh loop (``KnowledgeRefresher`` / ``OfflineDB.update``).
+    """
+    bounds: ParamBounds = dataclasses.field(default_factory=ParamBounds)
+    n_load_bins: int = 5
+    clustering: str = "kmeans++"
+    seed: int = 0
+    batched: bool | None = None
+    use_pallas: bool = False
+    dbs: dict[tuple[str, str], OfflineDB] = dataclasses.field(
+        default_factory=dict)
+
+    # ------------------------------------------------------------------ #
+    def fit(self, entries: list[LogEntry]) -> "MultiNetworkDB":
+        """Mine one OfflineDB per endpoint pair present in the log."""
+        groups: dict[tuple[str, str], list[LogEntry]] = {}
+        for e in entries:
+            groups.setdefault((e.src, e.dst), []).append(e)
+        for i, (pair, sel) in enumerate(sorted(groups.items())):
+            self.dbs[pair] = offline_analysis(
+                sel, bounds=self.bounds, n_load_bins=self.n_load_bins,
+                clustering=self.clustering, seed=self.seed + 31 * i,
+                batched=self.batched, use_pallas=self.use_pallas)
+        return self
+
+    def networks(self) -> list[tuple[str, str]]:
+        return sorted(self.dbs)
+
+    def get(self, src: str, dst: str) -> OfflineDB | None:
+        return self.dbs.get((src, dst))
+
+    # ------------------------------------------------------------------ #
+    def rank_networks(self, features: np.ndarray
+                      ) -> list[tuple[tuple[str, str], float]]:
+        """Known networks sorted by centroid distance to ``features``.
+
+        ``features`` is one or more ``LogEntry.features()`` vectors; each
+        network's score is the mean (over the query vectors) distance to
+        its nearest cluster centroid.  Ties break on the pair key so the
+        ranking is deterministic.  Cold-started clones (``origin`` set) are
+        excluded while any history-mined store exists: a clone's re-anchored
+        centroids sit right on its own link's coordinates without a single
+        underlying observation, so letting it outrank the real testbed
+        stores would chain second-hand knowledge donor-to-donor.
+        """
+        F = np.atleast_2d(np.asarray(features, np.float64))
+        mined = [p for p in self.networks() if self.dbs[p].origin is None]
+        if not (mined or self.dbs):
+            raise ValueError("no known networks: fit() some history first")
+        out = []
+        for pair in mined or self.networks():
+            C = self.dbs[pair].cluster_model.centroids
+            d = np.sqrt(((F[:, None, :] - C[None]) ** 2).sum(-1))  # (q, m)
+            out.append((pair, float(d.min(axis=1).mean())))
+        return sorted(out, key=lambda t: (t[1], t[0]))
+
+    def closest_network(self, features: np.ndarray) -> tuple[str, str]:
+        return self.rank_networks(features)[0][0]
+
+    # ------------------------------------------------------------------ #
+    def bootstrap(self, src: str, dst: str, features: np.ndarray, *,
+                  donor: tuple[str, str] | None = None,
+                  register: bool = True) -> OfflineDB:
+        """Cold-start knowledge for an endpoint pair with no history.
+
+        ``donor=None`` picks the closest known network for ``features``;
+        the clone records its provenance in ``OfflineDB.origin`` and, when
+        ``register`` is set, becomes the pair's live store (specializing it
+        via refresh never touches the donor).
+        """
+        if donor is None:
+            donor = self.closest_network(features)
+        db = _bootstrap_clone(self.dbs[donor], donor, features)
+        if register:
+            self.dbs[(src, dst)] = db
+        return db
+
+    def query(self, src: str, dst: str,
+              features: np.ndarray) -> ClusterKnowledge:
+        """Nearest-cluster lookup, cold-starting unseen endpoint pairs."""
+        db = self.dbs.get((src, dst))
+        if db is None:
+            db = self.bootstrap(src, dst, features)
+        return db.query(np.atleast_2d(features)[0])

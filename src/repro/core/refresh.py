@@ -32,7 +32,9 @@ from __future__ import annotations
 import dataclasses
 import threading
 
-from repro.core.offline import OfflineDB
+import numpy as np
+
+from repro.core.offline import MultiNetworkDB, OfflineDB
 from repro.core.online import TransferReport
 from repro.netsim.environment import LinkSpec
 from repro.netsim.loggen import LogEntry
@@ -126,7 +128,7 @@ class KnowledgeRefresher:
     def __init__(
         self,
         db: OfflineDB,
-        link: LinkSpec,
+        link: LinkSpec | None = None,
         config: RefreshConfig | None = None,
     ):
         self.db = db
@@ -158,7 +160,23 @@ class KnowledgeRefresher:
 
         Returns True when this observation triggered a refresh round.
         """
+        if self.link is None:
+            raise ValueError(
+                "observe() needs the LinkSpec the refresher was built "
+                "without; use ingest() for pre-built LogEntry batches"
+            )
         entries = session_log_entries(report, self.link, dataset, end_clock_s=now_s)
+        return bool(self.ingest(entries, now_s=now_s))
+
+    def ingest(self, entries: list[LogEntry], *, now_s: float) -> set[int]:
+        """Fold pre-built log entries into the buffer; refresh when due.
+
+        The Globus-schema twin of :meth:`observe` — cold-started networks
+        specialize through this path, feeding whatever fresh logs their
+        endpoint pair produces straight into the additive update.  Each
+        call counts as one completion toward the refresh cadence.  Returns
+        the refit cluster indices (empty when the cadence did not fire).
+        """
         with self._lock:
             for e in entries:
                 # route once; the refit reuses this assignment via
@@ -169,8 +187,8 @@ class KnowledgeRefresher:
             self._pending.extend(entries)
             self._completions_since += 1
             if not self._due(now_s):
-                return False
-            return bool(self._refresh_locked(now_s))
+                return set()
+            return self._refresh_locked(now_s)
 
     def refresh(self, now_s: float) -> set[int]:
         """Force a refresh round now; returns the refit cluster indices."""
@@ -211,4 +229,77 @@ class KnowledgeRefresher:
             st.last_refresh_s = float(now_s)
             st.entries_since_refresh = 0
             st.refreshes += 1
+        return touched
+
+
+class MultiNetworkRefresher:
+    """Routes fresh log entries to per-network refreshers over a
+    ``MultiNetworkDB``.
+
+    Networks appear lazily: the first entries for an unseen endpoint pair
+    cold-start that pair's knowledge from the closest known network (by
+    centroid distance over the entries' own features), then specialize it
+    through the standard per-network refresh cadence.  Every network keeps
+    its own ``KnowledgeRefresher`` — and therefore its own staleness
+    ledger — so a busy testbed refreshing often never masks a quiet one
+    going stale.
+    """
+
+    def __init__(self, mdb: MultiNetworkDB, config: RefreshConfig | None = None):
+        self.mdb = mdb
+        self.config = config or RefreshConfig()
+        self._refreshers: dict[tuple[str, str], KnowledgeRefresher] = {}
+
+    def refresher_for(
+        self,
+        src: str,
+        dst: str,
+        *,
+        features=None,
+        link: LinkSpec | None = None,
+    ) -> KnowledgeRefresher:
+        """The pair's refresher, cold-starting its DB if the pair is new.
+
+        ``features`` (one or more ``LogEntry.features()`` vectors) is only
+        required for the cold-start case; ``link`` only if the caller wants
+        :meth:`KnowledgeRefresher.observe` on the result.
+        """
+        pair = (src, dst)
+        r = self._refreshers.get(pair)
+        if r is not None:
+            if r.link is None and link is not None:
+                r.link = link  # late-supplied LinkSpec unlocks observe()
+            return r
+        db = self.mdb.get(src, dst)
+        if db is None:
+            if features is None:
+                raise ValueError(
+                    f"unknown network {pair}: cold-start needs features"
+                )
+            db = self.mdb.bootstrap(src, dst, features)
+        r = KnowledgeRefresher(db, link, self.config)
+        self._refreshers[pair] = r
+        return r
+
+    def ingest(
+        self, entries: list[LogEntry], *, now_s: float
+    ) -> dict[tuple[str, str], set[int]]:
+        """Route a mixed-network entry batch; returns refit clusters per
+        pair (only pairs whose cadence fired appear)."""
+        groups: dict[tuple[str, str], list[LogEntry]] = {}
+        for e in entries:
+            groups.setdefault((e.src, e.dst), []).append(e)
+        touched: dict[tuple[str, str], set[int]] = {}
+        for pair, sel in sorted(groups.items()):
+            r = self._refreshers.get(pair)
+            if r is None:
+                # feature matrix only matters for the cold-start of an
+                # unseen pair; skip the per-entry Python loop otherwise
+                feats = None
+                if self.mdb.get(*pair) is None:
+                    feats = np.stack([e.features() for e in sel])
+                r = self.refresher_for(pair[0], pair[1], features=feats)
+            t = r.ingest(sel, now_s=now_s)
+            if t:
+                touched[pair] = t
         return touched

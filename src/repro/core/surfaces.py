@@ -151,6 +151,27 @@ def _finalize_surface(surf: TricubicSurface, entries: list[LogEntry],
                              local_maxima=maxima, n_obs=len(entries))
 
 
+def scale_surface(ts: ThroughputSurface, s: float) -> ThroughputSurface:
+    """Rescale a fitted surface's throughput axis by a positive factor.
+
+    Natural-spline fitting is linear in the node values, so scaling the grid
+    and the precomputed pp-direction coefficients reproduces exactly the
+    surface that would have been fit to ``s``-scaled observations; sigma and
+    the precomputed maxima scale along, and the argmax location is invariant.
+    Cross-network cold-start uses this to re-anchor donor knowledge at the
+    target link's capacity (see ``offline.MultiNetworkDB``).
+    """
+    surf = TricubicSurface(ts.surface.gp, ts.surface.gcc, ts.surface.gpp,
+                           ts.surface.grid * s, ts.surface.ppc * s)
+    maxima = [LocalMax(m.params, m.value * s, m.interior)
+              for m in ts.local_maxima]
+    return ThroughputSurface(surface=surf, sigma=ts.sigma * s,
+                             load_intensity=ts.load_intensity,
+                             argmax_params=ts.argmax_params,
+                             max_throughput=ts.max_throughput * s,
+                             local_maxima=maxima, n_obs=ts.n_obs)
+
+
 def fit_surface(entries: list[LogEntry], load_intensity: float,
                 bounds: ParamBounds) -> ThroughputSurface:
     gp, gcc, gpp, grid, cnt, rep_sigma = _aggregate_grid(entries)

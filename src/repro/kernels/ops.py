@@ -82,6 +82,20 @@ def transfer_predict_argmax(values, idx, *, use_pallas: bool = False,
     return ref.batched_predict_argmax_ref(values, idx)
 
 
+def cluster_assign(X, C, *, use_pallas: bool = False,
+                   interpret: bool = False):
+    """Nearest-centroid assignment: X (N, d) points vs C (M, d) centroids.
+
+    Returns (labels (N,) int32, min squared distance (N,) f32) — the offline
+    clustering subsystem's million-row hot loop (full-data label passes and
+    additive-update routing in ``core.clustering`` / ``core.offline``).
+    """
+    if use_pallas:
+        from repro.kernels.cluster_assign import cluster_assign_pallas
+        return cluster_assign_pallas(X, C, interpret=interpret)
+    return ref.cluster_assign_ref(X, C)
+
+
 def nat_spline_fit(x, Y, *, use_pallas: bool = False,
                    interpret: bool = False):
     """Natural-cubic-spline coefficients for many rows over shared knots.

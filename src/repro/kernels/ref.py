@@ -391,6 +391,28 @@ def nat_spline_fit_ref(x, Y):
     return jnp.stack([a, b, c, d], axis=-1)
 
 
+# --------------------------------------------------------------------- #
+# batched nearest-centroid assignment (offline clustering hot loop)
+# --------------------------------------------------------------------- #
+@jax.jit
+def cluster_assign_ref(X, C):
+    """Nearest-centroid assignment for many points at once.
+
+    X: (N, d) points; C: (M, d) centroids.  Returns (labels (N,) int32,
+    min squared distance (N,) f32).  The squared distances are expanded as
+    ``|x|^2 - 2 x.c + |c|^2`` so the hot loop is one (N, d) x (d, M) matmul
+    instead of an (N, M, d) broadcast — the formulation the Pallas kernel in
+    ``kernels.cluster_assign`` tiles over N blocks on the MXU.  Oracle for
+    that kernel and the default compute path off-TPU (see ``kernels.ops``).
+    """
+    X = jnp.asarray(X, jnp.float32)
+    C = jnp.asarray(C, jnp.float32)
+    x2 = (X * X).sum(-1, keepdims=True)                  # (N, 1)
+    c2 = (C * C).sum(-1)[None, :]                        # (1, M)
+    d2 = jnp.maximum(x2 - 2.0 * (X @ C.T) + c2, 0.0)     # (N, M)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
 def ssd_sequential_ref(x, dt, A, Bmat, Cmat, initial_state=None):
     """Token-by-token SSD oracle used to validate the chunked form."""
     Bsz, L, H, P = x.shape

@@ -17,11 +17,15 @@ from repro.netsim.testbeds import (
 )
 from repro.netsim.workload import Dataset, make_dataset, FILE_CLASSES
 from repro.netsim.traffic import DiurnalTraffic, RegimeShiftTraffic, StepTraffic
-from repro.netsim.loggen import generate_history, LogEntry
+from repro.netsim.loggen import (
+    features_of, generate_history, generate_multi_network_history, LogEntry,
+    sample_feature_logs,
+)
 
 __all__ = [
     "Environment", "TransferParams", "ParamBounds", "SharedLink",
     "TenantEnvironment", "make_testbed", "XSEDE", "DIDCLAB", "DIDCLAB_XSEDE",
     "TESTBEDS", "Dataset", "make_dataset", "FILE_CLASSES", "DiurnalTraffic",
     "RegimeShiftTraffic", "StepTraffic", "generate_history", "LogEntry",
+    "features_of", "generate_multi_network_history", "sample_feature_logs",
 ]

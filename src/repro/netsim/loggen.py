@@ -14,6 +14,22 @@ from repro.netsim.environment import Environment, ParamBounds, TransferParams
 from repro.netsim.workload import FILE_CLASSES, make_dataset
 
 
+def features_of(bandwidth_mbps: float, rtt_s: float, avg_file_mb: float,
+                n_files: float) -> np.ndarray:
+    """The canonical clustering feature vector (log link + dataset facts).
+
+    Shared by ``LogEntry.features()``, request-side lookups, and the
+    cross-network cold-start similarity ranking, so a network with no
+    history can still be placed in the same feature space its donors were
+    clustered in."""
+    return np.array([
+        np.log10(bandwidth_mbps),
+        np.log10(max(rtt_s, 1e-5)),
+        np.log10(avg_file_mb),
+        np.log10(n_files),
+    ])
+
+
 @dataclasses.dataclass(frozen=True)
 class LogEntry:
     src: str
@@ -41,12 +57,8 @@ class LogEntry:
 
     def features(self) -> np.ndarray:
         """Clustering feature vector: link + dataset characteristics."""
-        return np.array([
-            np.log10(self.bandwidth_mbps),
-            np.log10(max(self.rtt_s, 1e-5)),
-            np.log10(self.avg_file_mb),
-            np.log10(self.n_files),
-        ])
+        return features_of(self.bandwidth_mbps, self.rtt_s,
+                           self.avg_file_mb, self.n_files)
 
 
 def generate_history(env: Environment, *, days: float = 14.0,
@@ -96,3 +108,62 @@ def generate_history(env: Environment, *, days: float = 14.0,
         ))
     entries.sort(key=lambda e: e.timestamp_s)
     return entries
+
+
+def generate_multi_network_history(names: list[str] | None = None, *,
+                                   days: float = 14.0,
+                                   transfers_per_day: int = 220,
+                                   seed: int = 0,
+                                   bounds: ParamBounds = ParamBounds()
+                                   ) -> list[LogEntry]:
+    """Replay history over several testbeds into one merged Globus-style log.
+
+    Each named testbed (default: all of ``netsim.testbeds.TESTBEDS``) is an
+    endpoint pair ``<name>/a -> <name>/b`` with its own diurnal traffic and
+    RNG stream, so the merged log is what a fleet-wide log store would hold
+    and ``MultiNetworkDB.fit`` can group it back per network."""
+    from repro.netsim.testbeds import TESTBEDS, make_testbed
+    if names is None:
+        names = list(TESTBEDS)
+    entries: list[LogEntry] = []
+    for i, name in enumerate(names):
+        env = make_testbed(name, seed=seed + 101 * i)
+        entries.extend(generate_history(
+            env, days=days, transfers_per_day=transfers_per_day,
+            seed=seed + 13 * i, bounds=bounds,
+            src=f"{name}/a", dst=f"{name}/b"))
+    entries.sort(key=lambda e: e.timestamp_s)
+    return entries
+
+
+def sample_feature_logs(n: int, *, seed: int = 0,
+                        names: list[str] | None = None) -> np.ndarray:
+    """Feature-space-only history sampler for scale benchmarks.
+
+    Draws the clustering feature vectors of ``n`` log rows spread across
+    the named testbeds — the same marginal distribution ``generate_history``
+    produces (per-testbed link facts, log-uniform file sizes inside the
+    paper's three file classes) — fully vectorized, so million-row feature
+    matrices materialize in milliseconds instead of simulating a million
+    transfers.  Returns an ``(n, 4)`` float array."""
+    from repro.netsim.testbeds import TESTBEDS
+    if names is None:
+        names = list(TESTBEDS)
+    rng = np.random.default_rng(seed)
+    bw = np.array([TESTBEDS[nm].bandwidth_mbps for nm in names])
+    rtt = np.array([TESTBEDS[nm].rtt_s for nm in names])
+    net = rng.integers(0, len(names), n)
+    classes = list(FILE_CLASSES.values())
+    lo = np.array([c[0] for c in classes])
+    hi = np.array([c[1] for c in classes])
+    n_lo = np.array([c[2] for c in classes])
+    n_hi = np.array([c[3] for c in classes])
+    fc = rng.integers(0, len(classes), n)
+    avg = np.exp(rng.uniform(np.log(lo[fc]), np.log(hi[fc])))
+    n_files = rng.integers(n_lo[fc], n_hi[fc] + 1)
+    return np.stack([
+        np.log10(bw[net]),
+        np.log10(np.maximum(rtt[net], 1e-5)),
+        np.log10(avg),
+        np.log10(n_files),
+    ], axis=1)

@@ -1,0 +1,120 @@
+"""Batched clustering at scale: parity with the numpy oracle + edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core.clustering import (
+    BATCHED_THRESHOLD,
+    fit_clusters,
+    fit_clusters_batched,
+    kmeans,
+    kmeans_pp_init,
+    label_agreement,
+)
+
+
+def _blobs(n_per, k, d=4, spread=0.4, seed=0):
+    rng = np.random.default_rng(seed)
+    X = np.concatenate(
+        [rng.normal(i * 6.0, spread, (n_per, d)) for i in range(k)]
+    )
+    rng.shuffle(X)
+    return X
+
+
+# ------------------------- batched vs numpy parity -------------------- #
+@pytest.mark.parametrize("n_per", [170, 700, 3000])
+def test_batched_matches_numpy_on_blobs(n_per):
+    X = _blobs(n_per, 3)
+    cmb = fit_clusters_batched(X, seed=0)
+    cmn = fit_clusters(X, seed=0, batched=False)
+    assert cmb.m == cmn.m == 3
+    assert label_agreement(cmb.labels, cmn.labels) >= 0.95
+    # centroids match up to permutation
+    d = np.sqrt(((cmb.centroids[:, None] - cmn.centroids[None]) ** 2).sum(-1))
+    assert d.min(axis=1).max() < 0.5
+
+
+def test_batched_is_lloyd_fixed_point():
+    """Exact numpy Lloyd polished from the batched centroids must not move
+    the labels — the computation-fidelity claim of the batched path."""
+    X = _blobs(2000, 4, spread=0.8, seed=3)
+    cmb = fit_clusters_batched(X, seed=0)
+    polished, _ = kmeans(X, cmb.m, init=cmb.centroids)
+    assert label_agreement(cmb.labels, polished) >= 0.99
+
+
+def test_fit_clusters_auto_routes_by_size():
+    small = _blobs(40, 3)
+    big = _blobs(BATCHED_THRESHOLD, 3)
+    assert fit_clusters(small, seed=0).m == 3
+    cm = fit_clusters(big, seed=0)  # n = 3 * threshold -> batched path
+    assert cm.m == 3
+    assert len(cm.labels) == len(big)
+
+
+def test_batched_assign_consistency():
+    X = _blobs(600, 3)
+    cm = fit_clusters_batched(X, seed=0)
+    many = cm.assign_many(X[:50])
+    assert [cm.assign(x) for x in X[:50]] == many.tolist()
+
+
+# ----------------------------- edge cases ----------------------------- #
+def test_kmeans_pp_init_coincident_points():
+    """All-coincident data exercises the degenerate uniform-seeding branch."""
+    X = np.ones((30, 3))
+    C = kmeans_pp_init(X, 4, np.random.default_rng(0))
+    assert C.shape == (4, 3)
+    assert np.allclose(C, 1.0)
+
+
+def test_kmeans_empty_clusters_keep_stale_centroids():
+    """With every point identical, all points land in cluster 0 after the
+    first assignment; the other centroids must keep their (stale) init
+    values instead of collapsing to NaN from a 0/0 mean."""
+    X = np.full((20, 2), 7.0)
+    labels, C = kmeans(X, 3, seed=0)
+    assert np.all(labels == labels[0])
+    assert np.isfinite(C).all()
+    assert np.allclose(C, 7.0)
+
+
+def test_batched_empty_clusters_keep_stale_centroids():
+    X = np.full((64, 2), 7.0)
+    cm = fit_clusters_batched(X, m_range=range(2, 4), seed=0)
+    assert np.isfinite(cm.centroids).all()
+    assert len(np.unique(cm.labels)) == 1
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_fit_clusters_too_few_points_raises(batched):
+    """The old ``assert best is not None`` vanished under ``python -O`` and
+    raised the wrong exception type; both paths now raise ValueError."""
+    X = np.random.default_rng(0).normal(size=(2, 3))
+    with pytest.raises(ValueError):
+        fit_clusters(X, seed=0, batched=batched)
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_fit_clusters_m_range_entirely_ge_n_raises(batched):
+    X = np.random.default_rng(1).normal(size=(10, 3))
+    with pytest.raises(ValueError):
+        fit_clusters(X, m_range=range(10, 14), seed=0, batched=batched)
+
+
+def test_batched_ch_prefers_true_k():
+    X = _blobs(400, 3, d=2)
+    cm = fit_clusters_batched(X, m_range=range(2, 7), seed=0)
+    assert cm.m == 3
+
+
+def test_label_agreement_permutation_invariant():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    b = np.array([2, 2, 0, 0, 1, 1])
+    assert label_agreement(a, b) == 1.0
+    assert label_agreement(a, np.array([2, 2, 0, 0, 1, 0])) == pytest.approx(
+        5.0 / 6.0
+    )
+    with pytest.raises(ValueError):
+        label_agreement(a, b[:-1])

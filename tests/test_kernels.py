@@ -220,3 +220,48 @@ def test_nat_spline_fit_coeffs_interpolate_knots():
     coeffs = np.asarray(nat_spline_fit(x, Y), np.float64)
     got = nat_spline_eval(x, coeffs, x)
     np.testing.assert_allclose(got, Y, rtol=1e-4, atol=1e-4)
+
+
+# ------------------ batched nearest-centroid assignment ----------------- #
+ASSIGN_CASES = [
+    # (N, M, d): non-block-multiple N exercises the padding path
+    (257, 3, 4),
+    (1024, 8, 4),
+    (1000, 12, 6),
+]
+
+
+@pytest.mark.parametrize("case", ASSIGN_CASES)
+def test_cluster_assign_ref_matches_numpy(case):
+    N, M, d = case
+    X = RNG.normal(size=(N, d)) * 3.0
+    C = RNG.normal(size=(M, d)) * 3.0
+    lab, d2 = ref.cluster_assign_ref(X, C)
+    want_d2 = ((X[:, None, :] - C[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(lab), want_d2.argmin(1))
+    np.testing.assert_allclose(np.asarray(d2), want_d2.min(1),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", ASSIGN_CASES)
+def test_cluster_assign_pallas_matches_ref(case):
+    from repro.kernels.cluster_assign import cluster_assign_pallas
+
+    N, M, d = case
+    X = RNG.normal(size=(N, d)) * 3.0
+    C = RNG.normal(size=(M, d)) * 3.0
+    lab_r, d2_r = ref.cluster_assign_ref(X, C)
+    lab_p, d2_p = cluster_assign_pallas(X, C, nb=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lab_p), np.asarray(lab_r))
+    np.testing.assert_allclose(np.asarray(d2_p), np.asarray(d2_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cluster_assign_ops_dispatch():
+    from repro.kernels.ops import cluster_assign
+
+    X = RNG.normal(size=(100, 4))
+    C = RNG.normal(size=(5, 4))
+    lab_ref, _ = cluster_assign(X, C)
+    lab_pal, _ = cluster_assign(X, C, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lab_ref), np.asarray(lab_pal))

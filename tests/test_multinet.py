@@ -1,0 +1,188 @@
+"""Multi-network offline knowledge: per-pair stores + cross-network
+cold-start + refresh-loop specialization."""
+
+import pytest
+
+from repro.core import (
+    AdaptiveSampler,
+    KnowledgeRefresher,
+    MultiNetworkDB,
+    MultiNetworkRefresher,
+    RefreshConfig,
+)
+from repro.netsim import (
+    features_of,
+    generate_history,
+    generate_multi_network_history,
+    make_dataset,
+    make_testbed,
+)
+
+
+@pytest.fixture(scope="module")
+def mdb():
+    hist = generate_multi_network_history(
+        ["xsede", "didclab"], days=2, transfers_per_day=100, seed=5
+    )
+    return MultiNetworkDB(seed=0).fit(hist)
+
+
+def _new_net_features():
+    env = make_testbed("didclab-xsede", seed=9)
+    ds = make_dataset("medium", 11)
+    return features_of(
+        env.link.bandwidth_mbps, env.link.rtt_s, ds.avg_file_mb, ds.n_files
+    )
+
+
+def test_fit_groups_by_endpoint_pair(mdb):
+    assert mdb.networks() == [
+        ("didclab/a", "didclab/b"),
+        ("xsede/a", "xsede/b"),
+    ]
+    for pair in mdb.networks():
+        db = mdb.get(*pair)
+        assert db is not None and db.clusters and db.origin is None
+
+
+def test_rank_networks_orders_by_centroid_distance(mdb):
+    # didclab-xsede: 1 Gbps like didclab, but WAN rtt like xsede; in log
+    # feature space the rtt gap to the LAN testbed dominates.
+    ranked = mdb.rank_networks(_new_net_features())
+    assert [p for p, _ in ranked] == [
+        ("xsede/a", "xsede/b"),
+        ("didclab/a", "didclab/b"),
+    ]
+    assert ranked[0][1] < ranked[1][1]
+    with pytest.raises(ValueError):
+        MultiNetworkDB().rank_networks(_new_net_features())
+
+
+def test_cold_start_registers_and_tracks_origin(mdb):
+    f = _new_net_features()
+    try:
+        db = mdb.bootstrap("new/a", "new/b", f)
+        assert db.origin == ("xsede/a", "xsede/b")
+        assert mdb.get("new/a", "new/b") is db
+        assert len(db.clusters) == len(mdb.dbs[db.origin].clusters)
+        # entry stores start empty: the clone specializes from its own logs
+        assert all(not ck.entries for ck in db.clusters)
+    finally:
+        mdb.dbs.pop(("new/a", "new/b"), None)
+
+
+def test_cold_start_rescales_donor_surfaces(mdb):
+    f = _new_net_features()
+    db = mdb.bootstrap("new/a", "new/b", f, register=False)
+    donor = mdb.dbs[db.origin]
+    # donor is the 10 Gbps testbed, target is 1 Gbps: predictions must come
+    # down by the capacity ratio while the argmax location is preserved
+    for ck, dk in zip(db.clusters, donor.clusters):
+        for s_new, s_old in zip(ck.surfaces, dk.surfaces):
+            assert s_new.max_throughput == pytest.approx(
+                0.1 * s_old.max_throughput, rel=1e-6
+            )
+            assert s_new.argmax_params == s_old.argmax_params
+        # centroid link coordinates move to the target network
+        assert ck.centroid[0] == pytest.approx(f[0])
+        assert ck.centroid[1] == pytest.approx(f[1])
+
+
+def test_cold_start_clone_specializes_without_touching_donor(mdb):
+    f = _new_net_features()
+    db = mdb.bootstrap("new/a", "new/b", f, register=False)
+    donor = mdb.dbs[db.origin]
+    donor_entries = [len(ck.entries) for ck in donor.clusters]
+    donor_surfaces = [ck.surfaces for ck in donor.clusters]
+    fresh = generate_history(
+        make_testbed("didclab-xsede", seed=21),
+        days=0.5,
+        transfers_per_day=80,
+        seed=42,
+        src="new/a",
+        dst="new/b",
+    )
+    touched = db.update(fresh)
+    assert touched
+    assert [len(ck.entries) for ck in donor.clusters] == donor_entries
+    assert [ck.surfaces for ck in donor.clusters] == donor_surfaces
+    # the refit clusters' surfaces are now fit from own entries only
+    for k in touched:
+        assert db.clusters[k].entries
+        assert db.clusters[k].surfaces
+
+
+def test_registered_clone_never_becomes_donor(mdb):
+    """A cold-start clone has re-anchored centroids but zero observations;
+    it must not outrank history-mined stores as a donor for the next
+    unseen network (no donor-to-donor knowledge chaining)."""
+    f = _new_net_features()
+    try:
+        first = mdb.bootstrap("clone/a", "clone/b", f)
+        ranked = mdb.rank_networks(f)
+        assert ("clone/a", "clone/b") not in [p for p, _ in ranked]
+        second = mdb.bootstrap("clone2/a", "clone2/b", f)
+        assert second.origin == first.origin  # from the real store
+    finally:
+        mdb.dbs.pop(("clone/a", "clone/b"), None)
+        mdb.dbs.pop(("clone2/a", "clone2/b"), None)
+
+
+def test_query_cold_starts_unseen_pair(mdb):
+    f = _new_net_features()
+    try:
+        ck = mdb.query("fresh/a", "fresh/b", f)
+        assert ck.surfaces
+        assert mdb.get("fresh/a", "fresh/b") is not None
+    finally:
+        mdb.dbs.pop(("fresh/a", "fresh/b"), None)
+
+
+def test_multinetwork_refresher_routes_and_cold_starts(mdb):
+    # NOTE: ingest() below legitimately refits the shared xsede store, so
+    # tests after this one must not depend on that store's exact mined
+    # state; the pairs registered here are cleaned up even on failure.
+    mnr = MultiNetworkRefresher(
+        mdb, RefreshConfig(every_completions=1, min_entries=4)
+    )
+    fresh = generate_history(
+        make_testbed("didclab-xsede", seed=23),
+        days=0.5,
+        transfers_per_day=60,
+        seed=43,
+        src="mnr/a",
+        dst="mnr/b",
+    )
+    known = generate_history(
+        make_testbed("xsede", seed=24),
+        days=0.5,
+        transfers_per_day=60,
+        seed=44,
+        src="xsede/a",
+        dst="xsede/b",
+    )
+    try:
+        touched = mnr.ingest(fresh + known, now_s=1e5)
+        assert ("mnr/a", "mnr/b") in touched
+        assert ("xsede/a", "xsede/b") in touched
+        assert mdb.get("mnr/a", "mnr/b").origin is not None
+        # per-network staleness ledgers are independent
+        r_new = mnr.refresher_for("mnr/a", "mnr/b")
+        r_old = mnr.refresher_for("xsede/a", "xsede/b")
+        assert r_new is not r_old
+        assert r_new.refreshes == r_old.refreshes == 1
+        # a late-supplied LinkSpec reaches the cached (link-less) refresher
+        link = make_testbed("didclab-xsede", seed=0).link
+        assert mnr.refresher_for("mnr/a", "mnr/b", link=link).link is link
+    finally:
+        mdb.dbs.pop(("mnr/a", "mnr/b"), None)
+
+
+def test_refresher_without_link_rejects_observe(mdb):
+    db = mdb.get("xsede/a", "xsede/b")
+    r = KnowledgeRefresher(db)
+    env = make_testbed("xsede", seed=3)
+    ds = make_dataset("medium", 7)
+    rep = AdaptiveSampler(db).transfer(env, ds)
+    with pytest.raises(ValueError):
+        r.observe(rep, ds, now_s=env.clock_s)
