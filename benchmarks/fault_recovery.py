@@ -1,0 +1,92 @@
+"""Fault-recovery benchmark: recovery-on vs recovery-off under every fault
+class of the scenario matrix.
+
+For each fault class (flap, drop, burst, kill, churn) the same fleet runs
+twice against the same deterministic ``FaultSchedule`` — once with
+``FleetConfig.recovery`` armed (collapse/surge re-probing, dead-link hold,
+killed-session re-admission with residual bytes) and once with it off (the
+pre-recovery status quo: drift handling only, killed sessions lost).
+
+Reported per class:
+
+  * delivered goodput (Mbit/s over the makespan, counting only bytes that
+    actually arrived — a killed session's lost residual does not count);
+  * completion-weighted tracking accuracy: mean per-chunk Eq. 25 accuracy
+    of the active surface over every bulk chunk, scaled by the delivered
+    fraction (accuracy over work that was abandoned is not accuracy);
+  * kills / recoveries / collapse re-probes.
+
+The harness asserts the headline gate — recovery-on strictly beats
+recovery-off on both metrics under every fault class — so a regression in
+the recovery layer fails the bench run, not just a dashboard.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row
+from repro.testing import (
+    SCENARIO_MATRIX,
+    build_requests,
+    build_scenario_db,
+    delivered_fraction,
+    run_scenario,
+    tracking_accuracy,
+)
+
+FAULT_CLASSES = ["flap", "drop", "burst", "kill", "churn"]
+
+
+def run(smoke: bool = False):
+    t0 = time.perf_counter()
+    # The gate compares behaviour, not fit speed: smoke keeps the exact DB
+    # the scenario suite uses (the fit is ~2 s) and trims the class list,
+    # because a smaller knowledge base genuinely changes fleet dynamics.
+    db = build_scenario_db("xsede")
+    csv_row("fault_db_fit_wall", (time.perf_counter() - t0) * 1e6,
+            f"{len(db.clusters)}clusters")
+
+    classes = ["flap", "kill"] if smoke else FAULT_CLASSES
+    failures = []
+    for fault in classes:
+        sc = next(s for s in SCENARIO_MATRIX
+                  if s.name == f"xsede-3-{fault}-constant")
+        reqs = build_requests(sc)
+        t1 = time.perf_counter()
+        on = run_scenario(db, sc, recovery=True)
+        off = run_scenario(db, sc, recovery=False)
+        wall_us = (time.perf_counter() - t1) * 1e6
+
+        frac_on = delivered_fraction(on, reqs)
+        frac_off = delivered_fraction(off, reqs)
+        acc_on = tracking_accuracy(on) * frac_on
+        acc_off = tracking_accuracy(off) * frac_off
+        csv_row(f"fault_{fault}_goodput", wall_us,
+                f"on={on.goodput_mbps:.1f}Mbps off={off.goodput_mbps:.1f}Mbps "
+                f"delta={on.goodput_mbps - off.goodput_mbps:+.1f}")
+        csv_row(f"fault_{fault}_accuracy", wall_us,
+                f"on={acc_on:.2f}% off={acc_off:.2f}% "
+                f"delta={acc_on - acc_off:+.2f}pts")
+        csv_row(f"fault_{fault}_events", wall_us,
+                f"kills={on.kills}/{off.kills} recoveries={on.recoveries} "
+                f"collapses={sum(s.report.collapses for s in on.sessions)} "
+                f"delivered={100 * frac_on:.1f}%/{100 * frac_off:.1f}%")
+        if on.goodput_mbps <= off.goodput_mbps:
+            failures.append(f"{fault}: goodput on={on.goodput_mbps:.1f} <= "
+                            f"off={off.goodput_mbps:.1f}")
+        if acc_on <= acc_off:
+            failures.append(f"{fault}: accuracy on={acc_on:.2f} <= "
+                            f"off={acc_off:.2f}")
+    if failures:
+        raise AssertionError(
+            "recovery-on failed to beat recovery-off: " + "; ".join(failures))
+    return failures
+
+
+def main(smoke: bool = False):
+    run(smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

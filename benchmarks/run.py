@@ -28,6 +28,7 @@ MODULES = [
     ("fleet", "benchmarks.fleet_scale"),
     ("refresh", "benchmarks.refresh_drift"),
     ("offline", "benchmarks.offline_scale"),
+    ("faults", "benchmarks.fault_recovery"),
 ]
 
 

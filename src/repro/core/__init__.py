@@ -12,7 +12,9 @@ from repro.core.surfaces import ThroughputSurface, fit_surface, surface_accuracy
 from repro.core.maxima import find_local_maxima, integer_argmax
 from repro.core.regions import identify_sampling_regions, SamplingRegion
 from repro.core.offline import MultiNetworkDB, OfflineDB, offline_analysis
-from repro.core.online import AdaptiveSampler, TransferReport
+from repro.core.online import (
+    AdaptiveSampler, RecoveryConfig, SessionCheckpoint, TransferReport,
+)
 from repro.core.tuner import TransferTuner, TunerConfig
 from repro.core.batched import SurfaceStack
 from repro.core.refresh import (
@@ -21,6 +23,7 @@ from repro.core.refresh import (
 )
 from repro.core.fleet import (
     FleetConfig, FleetReport, FleetRequest, FleetScheduler, ReprobeLimiter,
+    SessionOutcome,
 )
 
 __all__ = [
@@ -30,9 +33,10 @@ __all__ = [
     "ThroughputSurface", "fit_surface", "surface_accuracy",
     "find_local_maxima", "integer_argmax", "identify_sampling_regions",
     "SamplingRegion", "MultiNetworkDB", "OfflineDB", "offline_analysis",
-    "AdaptiveSampler", "TransferReport", "TransferTuner", "TunerConfig",
+    "AdaptiveSampler", "RecoveryConfig", "SessionCheckpoint",
+    "TransferReport", "TransferTuner", "TunerConfig",
     "SurfaceStack", "ClusterStaleness", "KnowledgeRefresher",
     "MultiNetworkRefresher", "RefreshConfig", "session_log_entries",
     "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
-    "ReprobeLimiter",
+    "ReprobeLimiter", "SessionOutcome",
 ]

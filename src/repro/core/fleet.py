@@ -39,7 +39,12 @@ import threading
 import numpy as np
 
 from repro.core.offline import OfflineDB
-from repro.core.online import AdaptiveSampler, TransferReport, request_features
+from repro.core.online import (
+    AdaptiveSampler,
+    RecoveryConfig,
+    TransferReport,
+    request_features,
+)
 from repro.core.refresh import KnowledgeRefresher, RefreshConfig
 from repro.netsim.environment import Environment, SharedLink, TenantEnvironment
 from repro.netsim.testbeds import TESTBEDS, make_testbed
@@ -72,14 +77,33 @@ class FleetConfig:
     score_vs_single: bool = True  # compute accuracy vs single-tenant optimum
     refresh: RefreshConfig | None = None  # continuous knowledge refresh; None
     # = off, which reproduces refresh-free fleet runs bit-for-bit
+    faults: object | None = None  # netsim.FaultSchedule shared by all tenant
+    # envs; None keeps every environment on the fault-free fast path
+    recovery: RecoveryConfig | None = None  # collapse re-probing + killed-
+    # session re-admission; None reproduces pre-recovery behaviour exactly
+
+
+@dataclasses.dataclass
+class SessionOutcome:
+    """One admitted session attempt — recovery re-admissions of a killed
+    request appear as further attempts with the same ``request_index``."""
+
+    request_index: int  # original request this attempt serves
+    attempt: int  # 0 = first admission, 1+ = recovery re-admissions
+    tenant_id: int  # fleet-clock tenant id of this attempt
+    admit_s: float  # simulated admission time
+    end_s: float  # simulated finish (or kill) time
+    report: TransferReport
 
 
 @dataclasses.dataclass
 class FleetReport:
-    """Roll-up of a fleet run (per-request reports in request order)."""
+    """Roll-up of a fleet run (per-request reports in request order;
+    ``reports[i]`` is request *i*'s final attempt when recovery re-admitted
+    it after a kill — ``sessions`` holds every attempt)."""
 
     reports: list[TransferReport]
-    goodput_mbps: float  # aggregate fleet goodput over the makespan
+    goodput_mbps: float  # aggregate delivered goodput over the makespan
     makespan_s: float
     samples_p50: float  # p50 of per-tenant convergence sample counts
     samples_p99: float
@@ -89,6 +113,13 @@ class FleetReport:
     admitted_concurrency: int  # admission cap actually used
     refreshes: int = 0  # continuous-refresh rounds run during the fleet
     refreshed_entries: int = 0  # log entries folded back into the OfflineDB
+    kills: int = 0  # sessions interrupted by fault injection
+    recoveries: int = 0  # killed sessions re-admitted with residual bytes
+    sessions: list[SessionOutcome] = dataclasses.field(default_factory=list)
+
+    def attempts_for(self, request_index: int) -> list[SessionOutcome]:
+        """Every attempt that served one original request, in order."""
+        return [s for s in self.sessions if s.request_index == request_index]
 
 
 class ReprobeLimiter:
@@ -293,6 +324,7 @@ class FleetScheduler:
             noise_sigma=base.noise_sigma,
             seed=req.env_seed,
             turn_gate=clock.turn,
+            faults=self.config.faults,
         )
 
     def _single_tenant_optimum(self, req: FleetRequest, at_clock_s: float) -> float:
@@ -338,12 +370,19 @@ class FleetScheduler:
             else None
         )
         cap = self.config.max_concurrent or self._auto_concurrency(requests, link)
+        recovery = self.config.recovery
 
-        order = sorted(range(n), key=lambda i: (requests[i].start_clock_s, i))
-        pending = collections.deque(order)
+        # Attempt-indexed state.  Slots 0..n-1 are the original requests'
+        # first attempts; recovery re-admissions of killed sessions append
+        # further slots (list growth only ever happens under admit_lock, and
+        # existing indices are never moved, so workers may read their own
+        # slot lock-free).
+        reqs: list[FleetRequest] = list(requests)
+        origin = list(range(n))  # attempt -> original request index
+        attempt_no = [0] * n
+        reports: list[TransferReport | None] = [None] * n
+        end_clock = [0.0] * n
         admit_time = [0.0] * n
-        admit_events = [threading.Event() for _ in range(n)]
-        admit_lock = threading.Lock()
         # Knowledge snapshot per tenant, resolved at admission: admissions
         # happen either before any worker runs (the initial wave) or inside a
         # finishing tenant's serialized turn, i.e. in simulated-time order —
@@ -351,15 +390,24 @@ class FleetScheduler:
         # deterministic, fully-consistent cluster, instead of racing its
         # wall-clock db.query against a concurrent refit swap.
         admitted_cluster = [None] * n
+        admit_events = [threading.Event() for _ in range(n)]
+        threads: list[threading.Thread] = []
+        pending = collections.deque(
+            sorted(range(n), key=lambda i: (reqs[i].start_clock_s, i))
+        )
+        admit_lock = threading.Lock()
+        errors: list[BaseException] = []
+        n_kills = [0]
+        n_recoveries = [0]
 
         def admit_next(now_s: float) -> None:
             with admit_lock:
                 if not pending:
                     return
                 i = pending.popleft()
-                admit_time[i] = max(requests[i].start_clock_s, now_s)
+                admit_time[i] = max(reqs[i].start_clock_s, now_s)
                 admitted_cluster[i] = self.db.query(
-                    request_features(link, requests[i].dataset)
+                    request_features(link, reqs[i].dataset)
                 )
                 # Register with the fleet clock BEFORE releasing the worker:
                 # from this point every already-running tenant waits for i
@@ -368,15 +416,48 @@ class FleetScheduler:
                 clock.admit(i, admit_time[i])
                 admit_events[i].set()
 
-        reports: list[TransferReport | None] = [None] * n
-        end_clock = [0.0] * n
-        errors: list[BaseException] = []
+        def enqueue_recovery(i: int, now_s: float) -> None:
+            """Re-admit attempt ``i``'s killed session with its residual
+            bytes.  Runs inside the dying worker's serialized turn, so
+            re-admissions land in simulated-time kill order and the fleet
+            stays deterministic."""
+            rep = reports[i]
+            if rep is None or not rep.interrupted:
+                return
+            with admit_lock:
+                n_kills[0] += 1
+                if (
+                    recovery is None
+                    or attempt_no[i] >= recovery.max_restarts
+                    or rep.moved_mb >= reqs[i].dataset.total_mb - 1e-9
+                ):
+                    return
+                n_recoveries[0] += 1
+                nxt = dataclasses.replace(
+                    reqs[i],
+                    dataset=reqs[i].dataset.residual(rep.moved_mb),
+                    start_clock_s=now_s + recovery.restart_delay_s,
+                    env_seed=reqs[i].env_seed + 101,
+                )
+                j = len(reqs)
+                reqs.append(nxt)
+                origin.append(origin[i])
+                attempt_no.append(attempt_no[i] + 1)
+                reports.append(None)
+                end_clock.append(0.0)
+                admit_time.append(0.0)
+                admitted_cluster.append(None)
+                admit_events.append(threading.Event())
+                pending.append(j)
+                th = threading.Thread(target=worker, args=(j,), daemon=True)
+                threads.append(th)
+                th.start()  # blocks on admit_events[j] until admitted
 
         def worker(i: int) -> None:
             admit_events[i].wait()
             env: TenantEnvironment | None = None
             try:
-                env = self._make_tenant_env(requests[i], i, shared, clock)
+                env = self._make_tenant_env(reqs[i], i, shared, clock)
                 env.clock_s = admit_time[i]  # already registered by admit_next
 
                 def gate(now_s: float, _env=env) -> bool:
@@ -392,9 +473,10 @@ class FleetScheduler:
                     max_samples=self.max_samples,
                     bulk_chunks=self.bulk_chunks,
                     reprobe_gate=gate,
+                    recovery=recovery,
                 )
                 reports[i] = sampler.transfer(
-                    env, requests[i].dataset, cluster=admitted_cluster[i]
+                    env, reqs[i].dataset, cluster=admitted_cluster[i]
                 )
             except BaseException as e:  # surfaced after join
                 errors.append(e)
@@ -408,54 +490,92 @@ class FleetScheduler:
                 # wall-clock thread-scheduling order.  The finished tenant's
                 # last flow interval stays registered on the shared link —
                 # it still occupies simulated time other tenants have not
-                # reached — and expires by its own end time.  Continuous
-                # refresh folds the finished session in inside this same
-                # turn, so refreshes too land in simulated-time finish order
-                # and queued admissions snapshot post-refresh knowledge.
+                # reached — and expires by its own end time (a killed
+                # session's interval was already truncated at the kill
+                # instant by the environment).  Continuous refresh folds the
+                # finished session in inside this same turn, so refreshes
+                # too land in simulated-time finish order and queued
+                # admissions snapshot post-refresh knowledge.  Interrupted
+                # sessions are excluded because a kill-truncated trace is
+                # not a set of steady-state observations; *completed*
+                # sessions fold in even when a fault was active — learning
+                # the link as it currently behaves, degraded or not, is
+                # what continuous refresh is for (the additive update
+                # re-learns the healthy regime as post-fault sessions land).
                 if env is not None:
                     with clock.turn(env):
-                        if refresher is not None and reports[i] is not None:
-                            refresher.observe(
-                                reports[i], requests[i].dataset, now_s=now
-                            )
+                        rep = reports[i]
+                        if (
+                            refresher is not None
+                            and rep is not None
+                            and not rep.interrupted
+                        ):
+                            refresher.observe(rep, reqs[i].dataset, now_s=now)
+                        enqueue_recovery(i, now)
                         admit_next(now)
                 else:
                     admit_next(now)
                 clock.finish(i)
 
-        threads = [
-            threading.Thread(target=worker, args=(i,), daemon=True) for i in range(n)
-        ]
+        for i in range(n):
+            threads.append(threading.Thread(target=worker, args=(i,), daemon=True))
         # Admit (and clock-register) the whole initial wave BEFORE any worker
         # thread can run: a first tenant racing ahead of the second tenant's
         # registration would escape serialization entirely.
         for _ in range(min(cap, n)):
             admit_next(float("-inf"))
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        for i in range(n):
+            threads[i].start()
+        joined = 0
+        while True:
+            with admit_lock:
+                if joined >= len(threads):
+                    break
+                th = threads[joined]
+            th.join()
+            joined += 1
         if errors:
             raise errors[0]
 
-        done = [r for r in reports if r is not None]
-        t_start = min(admit_time)
+        # Final report per original request = its last attempt (attempts for
+        # one request are appended in order, so a later slot wins).
+        final = {}
+        for j in range(len(reqs)):
+            if reports[j] is not None:
+                final[origin[j]] = j
+        done = [reports[final[i]] for i in range(n) if i in final]
+        all_reports = [r for r in reports if r is not None]
+        t_start = min(admit_time[:n])
         makespan = max(end_clock) - t_start
-        total_mb = sum(req.dataset.total_mb for req in requests)
-        samples = np.array([r.n_samples for r in done], np.float64)
+        moved_mb = sum(r.moved_mb for r in all_reports)
+        samples = np.array([r.n_samples for r in all_reports], np.float64)
         if self.config.score_vs_single:
             accs = []
-            for i, rep in enumerate(reports):
-                if rep is None:
+            for i in range(n):
+                if i not in final:
                     continue
                 opt = self._single_tenant_optimum(requests[i], admit_time[i])
-                accs.append(100.0 * min(rep.steady_mbps, opt) / max(opt, 1e-9))
+                accs.append(
+                    100.0 * min(reports[final[i]].steady_mbps, opt) / max(opt, 1e-9)
+                )
             accuracy = float(np.mean(accs)) if accs else 0.0
         else:
             accuracy = float("nan")
+        sessions = [
+            SessionOutcome(
+                request_index=origin[j],
+                attempt=attempt_no[j],
+                tenant_id=j,
+                admit_s=admit_time[j],
+                end_s=end_clock[j],
+                report=reports[j],
+            )
+            for j in range(len(reqs))
+            if reports[j] is not None
+        ]
         return FleetReport(
             reports=done,
-            goodput_mbps=total_mb * 8.0 / max(makespan, 1e-9),
+            goodput_mbps=moved_mb * 8.0 / max(makespan, 1e-9),
             makespan_s=makespan,
             samples_p50=float(np.percentile(samples, 50)),
             samples_p99=float(np.percentile(samples, 99)),
@@ -467,4 +587,7 @@ class FleetScheduler:
             refreshed_entries=(
                 refresher.entries_folded if refresher is not None else 0
             ),
+            kills=n_kills[0],
+            recoveries=n_recoveries[0],
+            sessions=sessions,
         )

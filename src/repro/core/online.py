@@ -18,6 +18,7 @@ import dataclasses
 from repro.core.offline import ClusterKnowledge, OfflineDB
 from repro.core.surfaces import ThroughputSurface
 from repro.netsim.environment import Environment, TransferParams
+from repro.netsim.faults import SessionKilled
 from repro.netsim.workload import Dataset
 
 
@@ -31,6 +32,55 @@ class SampleRecord:
     was_sample: bool
 
 
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    """Fault-recovery knobs for sessions and fleets (None everywhere = the
+    exact pre-recovery behaviour).
+
+    ``collapse_frac``: a bulk chunk whose achieved rate is both out of the
+    confidence band *and* below this fraction of the session's own previous
+    observed rate is a throughput *collapse* — not ordinary drift — and
+    triggers an immediate re-entry into adaptive probing from the
+    historical-knowledge prior (fresh ``converge`` over the cluster's
+    surface stack) instead of the two-strike closest-surface jump.  The
+    reference is the session's *own* trailing observation, not the surface
+    prediction: under fleet fair-share contention every chunk sits
+    systematically below the single-tenant surfaces, and anchoring on the
+    prediction would misread steady contention as a fault.
+    ``surge_frac``: the symmetric detector — an above-band chunk more than
+    this factor *over* the previous observation means the fault cleared (a
+    flap ended, capacity restored — or contention drained after fleet
+    churn) and the session re-probes back up immediately instead of
+    waiting out the two-strike drift path.  Armed
+    only after a collapse recovery: a fleet's tail (several contenders
+    finishing inside one chunk) can also multiply a session's rate, so the
+    surge path is reserved for sessions that know they are sitting in a
+    fault-degraded regime.  ``reprobe_budget`` bounds the
+    probes either re-entry may spend.  ``max_restarts``/``restart_delay_s``
+    govern fleet re-admission of killed sessions.
+    """
+
+    collapse_frac: float = 0.5
+    surge_frac: float = 2.0
+    dead_frac: float = 0.1  # below this ratio the link is effectively dark:
+    # probing it teaches nothing (every parameter choice is capacity-bound),
+    # so the session just pins the closest prior surface and waits, armed,
+    # for the surge that marks the fault clearing
+    reprobe_budget: int = 2
+    max_restarts: int = 3
+    restart_delay_s: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionCheckpoint:
+    """Progress checkpoint of an interrupted session (arXiv:1812.11255's
+    transfer-state checkpointing, reduced to what re-admission needs)."""
+
+    moved_mb: float                 # bytes delivered before the interruption
+    params: tuple[int, int, int]    # last live parameter tuple
+    clock_s: float                  # simulated time of the interruption
+
+
 @dataclasses.dataclass
 class TransferReport:
     params: TransferParams          # converged parameters
@@ -39,6 +89,10 @@ class TransferReport:
     n_samples: int
     total_s: float
     param_changes: int
+    moved_mb: float = 0.0           # MB actually delivered by this session
+    interrupted: bool = False       # killed mid-transfer (see checkpoint)
+    checkpoint: SessionCheckpoint | None = None
+    collapses: int = 0              # collapse-recovery re-probes performed
 
     @property
     def predicted_mbps(self) -> float:
@@ -110,18 +164,21 @@ class AdaptiveSampler:
     """
 
     def __init__(self, db: OfflineDB, *, z: float = 2.0, max_samples: int = 3,
-                 bulk_chunks: int = 8, reprobe_gate=None):
+                 bulk_chunks: int = 8, reprobe_gate=None,
+                 recovery: RecoveryConfig | None = None):
         self.db = db
         self.z = z
         self.max_samples = max_samples
         self.bulk_chunks = bulk_chunks
         self.reprobe_gate = reprobe_gate
+        self.recovery = recovery
 
     # ------------------------------------------------------------------ #
     def converge(self, env: Environment, dataset: Dataset,
                  cluster: ClusterKnowledge,
                  records: list[SampleRecord],
-                 probe_mb: float | None = None) -> ThroughputSurface:
+                 probe_mb: float | None = None,
+                 budget: int | None = None) -> ThroughputSurface:
         """Probe phase: locate the surface matching current external load.
 
         Sample 1 goes to the most *discriminative* point of the precomputed
@@ -137,7 +194,8 @@ class AdaptiveSampler:
                 self.bulk_chunks + self.max_samples)[0]
         cur = surfaces[len(surfaces) // 2]          # median load intensity
         remaining = list(surfaces)
-        budget = self.max_samples
+        if budget is None:
+            budget = self.max_samples
 
         # --- sample 1: discriminative probe from R_c ------------------- #
         region = cluster.region
@@ -195,57 +253,184 @@ class AdaptiveSampler:
         records: list[SampleRecord] = []
         t0 = env.clock_s
         probe_mb = dataset.sample_chunks(self.bulk_chunks + self.max_samples)[0]
-        surface = self.converge(env, dataset, cluster, records, probe_mb)
-        params = surface.argmax_params
+        params: TransferParams | None = None
+        bulk_moved_mb = 0.0   # bulk bytes delivered (kill/collapse bookkeeping)
+        partial_mb = 0.0      # bytes a killed chunk moved before dying
+        sampled_mb = 0.0      # probe bytes delivered
+        # (records-at-start, probe size) of the converge call in flight, so a
+        # kill mid-probe-phase still yields byte-exact progress accounting
+        probe_ctx: tuple[int, float] | None = (0, probe_mb)
+        interrupted = False
+        collapses = 0
+        try:
+            surface = self.converge(env, dataset, cluster, records, probe_mb)
+            params = surface.argmax_params
 
-        # bulk phase: chunked transfer with drift detection
-        sampled_mb = len(records) * probe_mb
-        remaining = max(dataset.total_mb - sampled_mb, 0.0)
-        chunk_mb = remaining / self.bulk_chunks
-        surfaces = cluster.sorted_by_load()
-        strikes = 0
-        for _ in range(self.bulk_chunks):
-            if chunk_mb <= 0:
-                break
-            res = env.transfer(params, chunk_mb, dataset.avg_file_mb,
-                               dataset.n_files)
-            achieved = res.steady_mbps
-            records.append(SampleRecord(params, surface.predict(params),
-                                        achieved, surface.load_intensity,
-                                        res.elapsed_s, False))
-            if not surface.in_confidence(params, achieved, self.z):
-                # Require two consecutive out-of-band chunks before acting:
-                # re-parameterizing on a single noisy reading costs a process
-                # respawn + slow start (Sec. 3.2: changes are expensive).
-                strikes += 1
-                if strikes >= 2:
-                    if (self.reprobe_gate is not None
-                            and not self.reprobe_gate(env.clock_s)):
-                        continue  # denied: keep strikes, retry on next miss
-                    surface = _closest_surface(
-                        surfaces, params, achieved,
-                        lighter=surface.above_band(params, achieved, self.z))
-                    if surface.argmax_params.as_tuple() != params.as_tuple():
+            # bulk phase: chunked transfer with drift detection
+            probe_ctx = None
+            sampled_mb = len(records) * probe_mb
+            remaining = max(dataset.total_mb - sampled_mb, 0.0)
+            chunk_mb = remaining / self.bulk_chunks
+            surfaces = cluster.sorted_by_load()
+            strikes = 0
+            chunks_left = self.bulk_chunks
+            # Collapse reference: the session's own last observed rate (the
+            # converged probe before the first chunk, then each bulk chunk).
+            baseline = records[-1].achieved if records else None
+            armed = False  # surge re-probe armed by a preceding collapse
+            hold = False   # regime outside the prior: freeze the drift path
+            while chunks_left > 0:
+                if chunk_mb <= 0:
+                    break
+                res = env.transfer(params, chunk_mb, dataset.avg_file_mb,
+                                   dataset.n_files)
+                chunks_left -= 1
+                bulk_moved_mb += chunk_mb
+                achieved = res.steady_mbps
+                records.append(SampleRecord(params, surface.predict(params),
+                                            achieved, surface.load_intensity,
+                                            res.elapsed_s, False))
+                prev_rate = baseline
+                baseline = achieved
+                if not surface.in_confidence(params, achieved, self.z):
+                    collapsed = (prev_rate is not None
+                                 and achieved < self.recovery.collapse_frac
+                                 * prev_rate) if self.recovery else False
+                    # No above-band requirement on the surge: an armed
+                    # session sits on the *lowest-predicting* prior surface,
+                    # which can still over-predict a dark link by an order
+                    # of magnitude, so post-fault rates may surge well
+                    # before they re-enter any band.  Arming (a preceding
+                    # collapse) is the guard that keeps fault-free fleets
+                    # from ever reaching this test.
+                    surged = (armed and prev_rate is not None
+                              and prev_rate > 0.0
+                              and achieved > self.recovery.surge_frac
+                              * prev_rate) if self.recovery else False
+                    if (self.recovery is not None and chunks_left > 0
+                            and (collapsed or surged)):
+                        # Throughput *collapse* (or the symmetric surge when
+                        # a fault clears), not drift: the link changed under
+                        # us.  Checkpoint progress and re-enter adaptive
+                        # probing from the historical prior instead of a
+                        # single surface jump.
+                        ratio = achieved / prev_rate if prev_rate else 1.0
+                        if collapsed and ratio < self.recovery.dead_frac:
+                            # Link effectively dark: every parameter choice
+                            # is capacity-bound, so probing teaches nothing.
+                            # Pin the closest prior surface and wait, armed,
+                            # for the surge that marks the fault clearing.
+                            # No gate check: this path spawns no process and
+                            # sends no probe, so it cannot join a storm.
+                            collapses += 1
+                            surface = _closest_surface(surfaces, params,
+                                                       achieved, lighter=False)
+                            armed = True
+                            hold = True  # the prior has no dark-link surface
+                            strikes = 0
+                            continue
+                        # Recovery re-probes respawn processes and transfer
+                        # probe chunks, so they answer to the same fleet-wide
+                        # limiter as the drift path — a fleet-wide capacity
+                        # swing must not trigger N simultaneous re-probe
+                        # storms.  Denied sessions fall through to ordinary
+                        # strike accounting and retry through the drift path.
+                        if (self.reprobe_gate is not None
+                                and not self.reprobe_gate(env.clock_s)):
+                            strikes += 1
+                            continue
+                        collapses += 1
+                        n_before = len(records)
+                        # Probe size scaled to the observed rate ratio: a
+                        # full-size probe at a collapsed rate would cost more
+                        # time than the bulk chunks it is trying to rescue.
+                        re_probe_mb = probe_mb * float(
+                            min(max(ratio, 0.05), 1.0))
+                        probe_ctx = (n_before, re_probe_mb)
+                        surface = self.converge(
+                            env, dataset, cluster, records, re_probe_mb,
+                            budget=self.recovery.reprobe_budget)
                         params = surface.argmax_params
+                        probe_ctx = None
+                        sampled_mb += (len(records) - n_before) * re_probe_mb
+                        left = max(dataset.total_mb - sampled_mb
+                                   - bulk_moved_mb, 0.0)
+                        chunk_mb = left / chunks_left
+                        strikes = 0
+                        # re-anchor on the re-probe's own observation
+                        baseline = records[-1].achieved
+                        # If even the re-probe's chosen surface cannot
+                        # explain what the probe measured, this regime is
+                        # outside the prior's support — hold the
+                        # empirically probed parameters instead of letting
+                        # the drift path chase surfaces that all mispredict.
+                        # A holding session stays armed (a surge out of the
+                        # unexplained regime must still be able to re-probe
+                        # it); a session whose re-probe was explained
+                        # disarms back to ordinary drift handling.
+                        hold = not surface.in_confidence(
+                            records[-1].params, records[-1].achieved, self.z)
+                        armed = collapsed or hold
+                        continue
+                    # Require two consecutive out-of-band chunks before
+                    # acting: re-parameterizing on a single noisy reading
+                    # costs a process respawn + slow start (Sec. 3.2:
+                    # changes are expensive).  A *holding* session skips the
+                    # drift path entirely: its last re-probe showed that no
+                    # prior surface describes this fault regime, so chasing
+                    # them surface-to-surface only walks the parameters off
+                    # the empirically probed optimum — only another collapse
+                    # or the clearing surge may move a holding session.
+                    strikes += 1
+                    if strikes >= 2 and not hold:
+                        if (self.reprobe_gate is not None
+                                and not self.reprobe_gate(env.clock_s)):
+                            continue  # denied: keep strikes, retry next miss
+                        surface = _closest_surface(
+                            surfaces, params, achieved,
+                            lighter=surface.above_band(params, achieved,
+                                                       self.z))
+                        if surface.argmax_params.as_tuple() != params.as_tuple():
+                            params = surface.argmax_params
+                        strikes = 0
+                else:
                     strikes = 0
-            else:
-                strikes = 0
+                    # Back in band: the regime settled, so a later rate jump
+                    # is ordinary fleet churn again, not a fault clearing.
+                    armed = False
+                    hold = False
+        except SessionKilled as kill:
+            interrupted = True
+            if probe_ctx is not None:  # killed inside a converge() call
+                n0, psize = probe_ctx
+                sampled_mb += (len(records) - n0) * psize
+            partial_mb = kill.moved_mb
+            if params is None:  # killed during the probe phase
+                params = records[-1].params if records else TransferParams(1, 1, 1)
         total_s = env.clock_s - t0
-        # Whole-transfer rate divides the MB actually moved: probes on a tiny
-        # dataset can exceed total_mb (then the bulk phase is empty and the
-        # session still moved sampled_mb), so the numerator must not be
-        # clamped to the dataset size.  In the normal remaining > 0 case the
-        # probes + bulk chunks add up to exactly total_mb.
-        moved_mb = max(dataset.total_mb, sampled_mb)
+        if interrupted:
+            moved_mb = sampled_mb + bulk_moved_mb + partial_mb
+        else:
+            # Whole-transfer rate divides the MB actually moved: probes on a
+            # tiny dataset can exceed total_mb (then the bulk phase is empty
+            # and the session still moved sampled_mb), so the numerator must
+            # not be clamped to the dataset size.  In the normal
+            # remaining > 0 case the probes + bulk chunks add up to exactly
+            # total_mb.
+            moved_mb = max(dataset.total_mb, sampled_mb)
         achieved_total = moved_mb * 8.0 / max(total_s, 1e-9)
         # Parameter changes = actual session switches the protocol paid for
         # (initial spawn + every consecutive-record parameter transition),
         # not distinct tuples — a probe revisiting an earlier tuple is a new
         # switch, and a discriminative probe colliding with the argmax is not.
         param_changes = _count_param_switches(records)
+        checkpoint = SessionCheckpoint(moved_mb, params.as_tuple(),
+                                       env.clock_s) if interrupted else None
         return TransferReport(params, achieved_total, records,
                               n_samples=sum(r.was_sample for r in records),
-                              total_s=total_s, param_changes=param_changes)
+                              total_s=total_s, param_changes=param_changes,
+                              moved_mb=moved_mb, interrupted=interrupted,
+                              checkpoint=checkpoint, collapses=collapses)
 
 
 def _count_param_switches(records: list[SampleRecord]) -> int:

@@ -17,6 +17,10 @@ from repro.netsim.testbeds import (
 )
 from repro.netsim.workload import Dataset, make_dataset, FILE_CLASSES
 from repro.netsim.traffic import DiurnalTraffic, RegimeShiftTraffic, StepTraffic
+from repro.netsim.faults import (
+    CapacityDrop, FaultSchedule, LinkFlap, LossBurst, SessionKilled,
+    TenantKill,
+)
 from repro.netsim.loggen import (
     features_of, generate_history, generate_multi_network_history, LogEntry,
     sample_feature_logs,
@@ -28,4 +32,6 @@ __all__ = [
     "TESTBEDS", "Dataset", "make_dataset", "FILE_CLASSES", "DiurnalTraffic",
     "RegimeShiftTraffic", "StepTraffic", "generate_history", "LogEntry",
     "features_of", "generate_multi_network_history", "sample_feature_logs",
+    "CapacityDrop", "FaultSchedule", "LinkFlap", "LossBurst", "SessionKilled",
+    "TenantKill",
 ]

@@ -99,7 +99,7 @@ class Environment:
     """
 
     def __init__(self, link: LinkSpec, traffic, *, noise_sigma: float = 0.03,
-                 seed: int = 0):
+                 seed: int = 0, faults=None):
         self.link = link
         self.traffic = traffic          # DiurnalTraffic: time -> load in [0,1)
         self.noise_sigma = noise_sigma
@@ -107,6 +107,8 @@ class Environment:
         self.clock_s: float = 0.0       # simulation wall-clock
         self.sample_count: int = 0      # number of probe transfers issued
         self._live_params: tuple[int, int, int] | None = None  # open sessions
+        self.faults = faults            # netsim.faults.FaultSchedule | None
+        self.tenant_id: int | None = None  # set by TenantEnvironment
 
     # ------------------------------------------------------------------ #
     # ground-truth throughput law
@@ -114,9 +116,16 @@ class Environment:
     def mean_throughput(self, params: TransferParams, avg_file_mb: float,
                         n_files: int, ext_load: float,
                         contending_mbps: float = 0.0,
-                        n_contending: int = 0) -> float:
-        """Noise-free expected throughput (Mbit/s) for a parameter choice."""
-        link = self.link
+                        n_contending: int = 0,
+                        link: LinkSpec | None = None) -> float:
+        """Noise-free expected throughput (Mbit/s) for a parameter choice.
+
+        ``link`` overrides the environment's static LinkSpec — the fault
+        path evaluates the law under a fault-perturbed spec per segment;
+        every fault-free caller leaves it ``None``.
+        """
+        if link is None:
+            link = self.link
         cc, p, pp = params.cc, params.p, params.pp
         streams = cc * p
 
@@ -189,6 +198,20 @@ class Environment:
     def advance(self, seconds: float) -> None:
         self.clock_s += float(seconds)
 
+    def _setup_cost_s(self, params: TransferParams) -> float:
+        """Process spawn + TCP slow-start ramp charged on a parameter
+        change, and the live-session bookkeeping that goes with it.  The
+        single definition both the fault-free and the faulted transfer
+        paths charge — keeping them arithmetically identical is what the
+        empty-schedule parity test relies on."""
+        if self._live_params == params.as_tuple():
+            return 0.0
+        setup_s = 0.15 + 0.04 * params.cc + 0.01 * params.cc * params.p
+        setup_s += min(4.0 * self.link.rtt_s
+                       * math.log2(1 + params.cc * params.p), 2.0)
+        self._live_params = params.as_tuple()
+        return setup_s
+
     # ------------------------------------------------------------------ #
     # contention hooks (overridden by TenantEnvironment for shared links)
     # ------------------------------------------------------------------ #
@@ -212,7 +235,14 @@ class Environment:
         differ from the currently open sessions — mirroring the paper's
         Section 3.2 discussion.  Re-using live sessions is free.  The achieved
         rate carries Gaussian measurement noise (Sec. 3.1.1).
+
+        With a ``FaultSchedule`` attached the call routes to the piecewise
+        fault path; ``faults=None`` (the default) keeps this fast path
+        byte-for-byte identical to the fault-free simulator.
         """
+        if self.faults is not None:
+            return self._transfer_faulted(params, size_mb, avg_file_mb,
+                                          n_files, is_sample=is_sample)
         load = self.current_load()
         contending, n_active = self._contention()
         mean = self.mean_throughput(params, avg_file_mb, n_files, load,
@@ -222,13 +252,7 @@ class Environment:
         noisy = max(noisy, 0.01 * mean)
 
         # Setup cost: process spawn + slow-start ramp, only on param change.
-        if self._live_params != params.as_tuple():
-            setup_s = 0.15 + 0.04 * params.cc + 0.01 * params.cc * params.p
-            setup_s += min(4.0 * self.link.rtt_s
-                           * math.log2(1 + params.cc * params.p), 2.0)
-            self._live_params = params.as_tuple()
-        else:
-            setup_s = 0.0
+        setup_s = self._setup_cost_s(params)
         steady_s = (size_mb * 8.0) / max(noisy, 1e-3)
         elapsed = setup_s + steady_s
         effective = (size_mb * 8.0) / elapsed
@@ -238,6 +262,73 @@ class Environment:
         if is_sample:
             self.sample_count += 1
         return TransferResult(float(effective), float(noisy), float(elapsed))
+
+    def _transfer_faulted(self, params: TransferParams, size_mb: float,
+                          avg_file_mb: float, n_files: int, *,
+                          is_sample: bool) -> TransferResult:
+        """Piecewise transfer under an attached ``FaultSchedule``.
+
+        Load, contention, and the single Gaussian noise draw are resolved
+        once at chunk start (the same quasi-static discipline ``SharedLink``
+        documents); only the *fault* state varies within the chunk.  The
+        chunk is integrated segment-by-segment across fault boundaries, so a
+        mid-chunk flap stalls progress for its duration and a capacity
+        restore resumes it — the reported steady rate is the time-weighted
+        average the monitoring loop would see.  A matching ``TenantKill``
+        inside the chunk truncates it at the kill instant: the flow interval
+        is registered only up to that instant (a full-chunk interval would
+        leave phantom contention on the shared link after the session died)
+        and ``SessionKilled`` carries the bytes the chunk actually moved.
+        """
+        from repro.netsim.faults import SessionKilled
+
+        faults = self.faults
+        load = self.current_load()
+        contending, n_active = self._contention()
+        noise = float(self._rng.normal(0.0, self.noise_sigma))
+        setup_s = self._setup_cost_s(params)
+        t0 = self.clock_s
+        kill_at = faults.next_kill(self.tenant_id, t0)
+        t = t0 + setup_s
+        if kill_at is not None and kill_at <= t:
+            # killed during process spawn / slow start: nothing moved, and
+            # no flow interval is ever registered for this chunk
+            self.clock_s = max(kill_at, t0)
+            raise SessionKilled(0.0, self.clock_s)
+
+        remaining_mbit = size_mb * 8.0
+        moved_mbit = 0.0
+        while remaining_mbit > 1e-12:
+            link_t = faults.link_at(self.link, t)
+            mean = self.mean_throughput(params, avg_file_mb, n_files, load,
+                                        contending_mbps=contending,
+                                        n_contending=n_active, link=link_t)
+            rate = max(mean * (1.0 + noise), 0.01 * mean, 1e-3)
+            seg_end = faults.next_change(t)
+            if kill_at is not None:
+                seg_end = min(seg_end, kill_at)
+            if t + remaining_mbit / rate <= seg_end:
+                t += remaining_mbit / rate
+                moved_mbit += remaining_mbit
+                remaining_mbit = 0.0
+            else:
+                dt = seg_end - t
+                moved_mbit += rate * dt
+                remaining_mbit -= rate * dt
+                t = seg_end
+                if kill_at is not None and t >= kill_at:
+                    steady = moved_mbit / max(t - t0 - setup_s, 1e-9)
+                    self._register_flow(float(steady), kill_at)
+                    self.clock_s = t
+                    raise SessionKilled(moved_mbit / 8.0, t)
+        elapsed = t - t0
+        steady = moved_mbit / max(elapsed - setup_s, 1e-9)
+        effective = (size_mb * 8.0) / max(elapsed, 1e-9)
+        self._register_flow(float(steady), t)
+        self.advance(elapsed)
+        if is_sample:
+            self.sample_count += 1
+        return TransferResult(float(effective), float(steady), float(elapsed))
 
     def measure_steady(self, params: TransferParams, avg_file_mb: float,
                        n_files: int) -> float:
@@ -296,8 +387,9 @@ class TenantEnvironment(Environment):
 
     def __init__(self, link: LinkSpec, traffic, shared: SharedLink,
                  tenant_id: int, *, noise_sigma: float = 0.03, seed: int = 0,
-                 turn_gate=None):
-        super().__init__(link, traffic, noise_sigma=noise_sigma, seed=seed)
+                 turn_gate=None, faults=None):
+        super().__init__(link, traffic, noise_sigma=noise_sigma, seed=seed,
+                         faults=faults)
         self.shared = shared
         self.tenant_id = tenant_id
         self.turn_gate = turn_gate

@@ -20,10 +20,24 @@ class Dataset:
     file_class: str
     avg_file_mb: float
     n_files: int
+    # Residual bytes of a recovered (killed / interrupted) session.  File-mix
+    # characteristics stay those of the original dataset — the files are the
+    # same, only fewer remain — while total_mb reflects exactly the bytes
+    # still owed, so recovery bookkeeping is byte-exact rather than rounded
+    # to whole files.
+    resume_mb: float | None = None
 
     @property
     def total_mb(self) -> float:
+        if self.resume_mb is not None:
+            return self.resume_mb
         return self.avg_file_mb * self.n_files
+
+    def residual(self, moved_mb: float) -> "Dataset":
+        """The dataset that remains after ``moved_mb`` MB were delivered."""
+        left = max(self.total_mb - moved_mb, 0.0)
+        return dataclasses.replace(self, name=self.name + "+resume",
+                                   resume_mb=left)
 
     def sample_chunks(self, n_chunks: int) -> list[float]:
         """Split the dataset into chunk sizes (MB) for chunk-by-chunk transfer.

@@ -1,4 +1,4 @@
-"""Suite-wide defaults.
+"""Suite-wide defaults and jax-environment hermeticity.
 
 Default to 4 placeholder host devices (set before any jax import — jax
 locks the device count at init) so the multi-stage pipeline-parallel test
@@ -9,3 +9,63 @@ import os
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
+
+import sys  # noqa: E402  (the setdefault above must precede any jax import)
+
+import pytest  # noqa: E402
+
+# The jax configuration the whole suite runs under, captured before any test
+# body executes.  Kernel dispatch (Pallas vs XLA oracle, float32 vs float64)
+# keys off these, so a test mutating them in place would make *later* tests'
+# behaviour depend on execution order.
+_JAX_ENV_KEYS = ("XLA_FLAGS", "JAX_PLATFORMS", "JAX_ENABLE_X64")
+_PINNED_ENV = {k: os.environ.get(k) for k in _JAX_ENV_KEYS}
+
+
+def _x64_state():
+    if "jax" not in sys.modules:
+        return None
+    import jax
+
+    return bool(jax.config.jax_enable_x64)
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_jax_env():
+    """Restore the jax-relevant process environment after every test.
+
+    Tests that need a different platform / precision must apply it in a
+    subprocess (see ``jax_subprocess_env``) or restore it themselves —
+    either way this fixture guarantees test order can never flip kernel
+    dispatch for the rest of the session.
+    """
+    x64_before = _x64_state()
+    yield
+    for k, v in _PINNED_ENV.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+    x64_after = _x64_state()
+    if x64_before is not None and x64_after != x64_before:
+        import jax
+
+        jax.config.update("jax_enable_x64", x64_before)
+
+
+@pytest.fixture
+def jax_subprocess_env():
+    """Environment for running jax entry points in a subprocess.
+
+    The canonical route for anything that must set ``XLA_FLAGS`` itself (it
+    only takes effect before the first jax import, which in this suite has
+    long happened): drop the suite's 4-device ``XLA_FLAGS`` so the child
+    sets its own, point PYTHONPATH at the source tree, and pass every other
+    ambient jax setting through untouched — stripping e.g. an inherited
+    ``JAX_PLATFORMS=cpu`` would send the child into platform probing the
+    host machine cannot satisfy.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("XLA_FLAGS", None)
+    return env

@@ -2,7 +2,9 @@
 
 Runs the real dryrun entry point in a subprocess (it must set XLA_FLAGS
 before importing jax, so it cannot run in-process with the rest of the
-suite) for one cheap cell on both production meshes.
+suite) for one cheap cell on both production meshes.  The subprocess
+environment comes from the shared ``jax_subprocess_env`` conftest fixture,
+which strips the suite's own jax configuration.
 """
 import json
 import os
@@ -15,10 +17,9 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.mark.parametrize("flags", [[], ["--multi-pod"]])
-def test_dryrun_cell_compiles(tmp_path, flags):
+def test_dryrun_cell_compiles(tmp_path, flags, jax_subprocess_env):
     out = tmp_path / "dr.json"
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
-    env.pop("XLA_FLAGS", None)
+    env = jax_subprocess_env
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
          "--arch", "rwkv6-1.6b", "--shape", "decode_32k",

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis, via the run-or-skip shim): spline
+interpolation and scaling linearity over arbitrary valid knot sets, and
+``ClusterModel.assign`` vs ``assign_many`` parity fuzzed over shapes,
+value scales, and chunk-boundary sizes."""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import clustering
+from repro.core.clustering import ClusterModel
+from repro.core.spline import CubicSpline1D, TricubicSurface
+from repro.core.surfaces import fit_surface, scale_surface
+from repro.netsim import ParamBounds, TransferParams
+from repro.netsim.loggen import LogEntry
+
+
+# ------------------------------------------------------------------ #
+# CubicSpline1D: the interpolant passes through every knot
+# ------------------------------------------------------------------ #
+@given(st.integers(2, 12), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_cubic1d_interpolates_knots_exactly(n, seed):
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.choice(np.arange(1, 64), size=n, replace=False)).astype(float)
+    y = rng.normal(scale=10.0 ** rng.integers(-2, 4), size=n)
+    sp = CubicSpline1D.fit(x, y)
+    got = np.array([float(sp(q)) for q in x])
+    # float32 jax arithmetic: exact to single-precision scale
+    tol = 1e-4 * max(1.0, float(np.abs(y).max()))
+    np.testing.assert_allclose(got, y, atol=tol)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_cubic1d_single_and_two_knot_degenerate_cases(seed):
+    rng = np.random.default_rng(seed)
+    y0, y1 = rng.normal(size=2)
+    one = CubicSpline1D.fit(np.array([2.0]), np.array([y0]))
+    assert float(one(2.0)) == pytest.approx(y0, abs=1e-5)
+    assert float(one(7.0)) == pytest.approx(y0, abs=1e-5)  # constant
+    two = CubicSpline1D.fit(np.array([1.0, 5.0]), np.array([y0, y1]))
+    assert float(two(1.0)) == pytest.approx(y0, abs=1e-4)
+    assert float(two(5.0)) == pytest.approx(y1, abs=1e-4)
+    assert float(two(3.0)) == pytest.approx((y0 + y1) / 2.0, abs=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# surface scaling linearity over arbitrary valid knot sets
+# ------------------------------------------------------------------ #
+@given(st.integers(0, 10_000),
+       st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False))
+@settings(max_examples=20, deadline=None)
+def test_tricubic_scaling_linearity_arbitrary_knots(seed, s):
+    """Natural-spline fitting is linear in the node values: scaling the grid
+    and the precomputed pp-coefficients is exactly the surface fit to
+    scaled observations (what ``scale_surface`` relies on)."""
+    rng = np.random.default_rng(seed)
+    gp = np.sort(rng.choice(np.arange(1, 17), rng.integers(2, 6),
+                            replace=False)).astype(float)
+    gcc = np.sort(rng.choice(np.arange(1, 17), rng.integers(2, 6),
+                             replace=False)).astype(float)
+    gpp = np.sort(rng.choice(np.arange(1, 17), rng.integers(2, 6),
+                             replace=False)).astype(float)
+    grid = rng.uniform(10.0, 5000.0, (len(gp), len(gcc), len(gpp)))
+    surf = TricubicSurface.fit(gp, gcc, gpp, grid)
+    scaled = TricubicSurface(gp, gcc, gpp, grid * s, surf.ppc * s)
+    refit = TricubicSurface.fit(gp, gcc, gpp, grid * s)
+    q = rng.uniform(1.0, 16.0, (8, 3))
+    a = np.asarray(scaled.batch_eval(q), float)
+    b = np.asarray(refit.batch_eval(q), float)
+    c = np.asarray(surf.batch_eval(q), float) * s
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9 * s)
+    np.testing.assert_allclose(a, c, rtol=1e-9, atol=1e-9 * s)
+
+
+@given(st.floats(0.01, 50.0, allow_nan=False, allow_infinity=False),
+       st.integers(1, 16), st.integers(1, 16), st.integers(1, 16))
+@settings(max_examples=25, deadline=None)
+def test_scale_surface_linearity_on_fitted_surface(s, p, cc, pp):
+    ts = _fitted_surface()
+    scaled = scale_surface(ts, s)
+    prm = TransferParams(cc, p, pp)
+    assert scaled.predict(prm) == pytest.approx(s * ts.predict(prm),
+                                                rel=1e-9, abs=1e-9)
+    assert scaled.sigma == pytest.approx(s * ts.sigma)
+    assert scaled.max_throughput == pytest.approx(s * ts.max_throughput)
+    assert scaled.argmax_params == ts.argmax_params  # location is invariant
+    assert scaled.load_intensity == ts.load_intensity
+
+
+_SURFACE_CACHE = []
+
+
+def _fitted_surface():
+    """One real fitted ThroughputSurface, built once (fitting per hypothesis
+    example would dominate the suite)."""
+    if not _SURFACE_CACHE:
+        rng = np.random.default_rng(0)
+        entries = []
+        for _ in range(160):
+            cc, p, pp = (int(rng.choice([1, 2, 4, 8, 16])) for _ in range(3))
+            th = 50.0 * cc + 30.0 * p + 5.0 * pp + rng.normal(0, 20.0)
+            entries.append(LogEntry(
+                src="a", dst="b", bandwidth_mbps=1e4, rtt_s=0.04,
+                avg_file_mb=100.0, n_files=100, cc=cc, p=p, pp=pp,
+                throughput_mbps=max(th, 1.0), timestamp_s=0.0, ext_load=0.2))
+        _SURFACE_CACHE.append(fit_surface(entries, 0.2, ParamBounds()))
+    return _SURFACE_CACHE[0]
+
+
+# ------------------------------------------------------------------ #
+# assign vs assign_many parity
+# ------------------------------------------------------------------ #
+@given(st.integers(1, 300), st.integers(2, 6), st.integers(1, 8),
+       st.integers(-3, 4), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_assign_many_matches_assign_across_chunk_boundaries(
+        n, d, m, scale, seed):
+    """The chunked float64 batch path must route every vector exactly like
+    the scalar path, regardless of batch size, value scale, or where the
+    chunk boundary falls — this is the refresh subsystem's determinism
+    guarantee (an entry's cluster can never depend on how large a batch it
+    arrived in)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)) * 10.0 ** scale
+    C = rng.normal(size=(m, d)) * 10.0 ** scale
+    model = ClusterModel(labels=np.zeros(n, np.int64), centroids=C, m=m,
+                         method="kmeans++", ch=0.0)
+    old_chunk = clustering._CHUNK
+    clustering._CHUNK = 7  # force many chunk boundaries inside small n
+    try:
+        got = model.assign_many(X)
+    finally:
+        clustering._CHUNK = old_chunk
+    want = np.array([model.assign(x) for x in X], np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_assign_many_chunk_attribute_is_restorable():
+    """Guard for the monkeypatching above: the module must expose _CHUNK."""
+    assert isinstance(clustering._CHUNK, int) and clustering._CHUNK >= 1
