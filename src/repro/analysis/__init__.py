@@ -1,0 +1,45 @@
+"""Static analysis for the reproduction's determinism, lock-discipline,
+kernel-contract, and JAX-tracing invariants.
+
+The scenario matrix (``repro.testing``) asserts bit-identical canonical
+traces; every guarantee behind that assertion used to be a convention.
+This package proves the conventions hold on every commit:
+
+* **determinism** (DET*): no wall-clock, no unseeded RNG, no set-order
+  iteration, no ``id()`` ordering in sim-path modules;
+* **locks** (LOCK*): ``# guarded-by:`` field tags checked against actual
+  ``with lock:`` enclosure;
+* **kernel-contract** (KER*): every Pallas kernel has its ref.py oracle,
+  ops.py dispatch, and kernel-parity test;
+* **tracing** (TRACE*): no Python branching on traced values and no state
+  mutation inside ``@jax.jit`` functions;
+* **meta** (SUP*): suppressions carry reasons.
+
+Run ``python -m repro.analysis`` from the repo root, or call
+:func:`run_analysis` (the tier-1 self-scan test does).  Suppress a finding
+with ``# repro-lint: disable=RULE -- reason`` on the flagged line.
+"""
+
+from repro.analysis.base import REGISTRY, Rule, Violation, all_rules
+from repro.analysis.config import (
+    AnalysisConfig,
+    KernelContractConfig,
+    Scope,
+    default_config,
+    permissive_config,
+)
+from repro.analysis.engine import AnalysisResult, run_analysis
+
+__all__ = [
+    "AnalysisConfig",
+    "AnalysisResult",
+    "KernelContractConfig",
+    "REGISTRY",
+    "Rule",
+    "Scope",
+    "Violation",
+    "all_rules",
+    "default_config",
+    "permissive_config",
+    "run_analysis",
+]

@@ -1,0 +1,75 @@
+"""``python -m repro.analysis`` — the static-analysis CLI.
+
+Exit status: 0 when every finding is suppressed or absent, 1 on any
+unsuppressed violation, 2 on usage errors.  Run from the repo root so the
+default path scopes (``src/repro/core/`` etc.) resolve; ``--root`` anchors
+them elsewhere.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.base import all_rules
+from repro.analysis.config import default_config, permissive_config
+from repro.analysis.engine import run_analysis
+from repro.analysis.report import human_report, json_report
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Determinism, lock-discipline, kernel-contract, and "
+                    "JAX-tracing static analysis for this repository.",
+    )
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to scan (default: src)")
+    p.add_argument("--root", default=None,
+                   help="repo root that path scopes are relative to "
+                        "(default: current directory)")
+    p.add_argument("--format", choices=("human", "json"), default="human")
+    p.add_argument("--out", default=None,
+                   help="also write the report to this file")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--no-scope", action="store_true",
+                   help="ignore path scoping and apply every rule to every "
+                        "scanned file (fixture / ad-hoc runs)")
+    p.add_argument("--verbose", action="store_true",
+                   help="also print suppressed findings")
+    p.add_argument("--list-rules", action="store_true")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.rule_id}  [{rule.family}]  {rule.summary}")
+        return 0
+    paths = [Path(p) for p in (args.paths or ["src"])]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path: {', '.join(map(str, missing))}",
+              file=sys.stderr)
+        return 2
+    rule_ids = None
+    if args.rules:
+        rule_ids = {r.strip() for r in args.rules.split(",") if r.strip()}
+        known = {r.rule_id for r in all_rules()}
+        bad = rule_ids - known
+        if bad:
+            print(f"error: unknown rule id(s): {', '.join(sorted(bad))}",
+                  file=sys.stderr)
+            return 2
+    config = permissive_config() if args.no_scope else default_config()
+    result = run_analysis(paths, root=args.root, config=config,
+                          rule_ids=rule_ids)
+    report = (json_report(result) if args.format == "json"
+              else human_report(result, verbose=args.verbose))
+    print(report)
+    if args.out:
+        Path(args.out).write_text(report + "\n")
+    return 0 if result.ok else 1

@@ -1,0 +1,9 @@
+"""Rule families — importing this package registers every rule."""
+
+from repro.analysis.rules import (  # noqa: F401
+    determinism,
+    kernel_contract,
+    locks,
+    meta,
+    tracing,
+)

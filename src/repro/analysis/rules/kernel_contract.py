@@ -1,0 +1,234 @@
+"""Kernel-contract rules: the pallas / oracle / dispatch / parity-test
+triangle, previously a six-kernel convention maintained by hand.
+
+Every Pallas kernel module (a file under ``kernels/`` containing a
+``pallas_call`` and a public ``*_pallas`` entry point) must have:
+
+* **KER001** — a dispatch wrapper in ``kernels/ops.py`` that imports the
+  ``*_pallas`` entry (the jit-ready ``use_pallas=`` switch every caller
+  routes through);
+* **KER002** — an XLA oracle: the dispatch wrapper must call at least one
+  ``ref.*`` function that actually exists in ``kernels/ref.py`` (the
+  default path, and what parity is measured against);
+* **KER003** — a parity test in the file(s) the ``kernel-parity`` CI job
+  runs, exercising the Pallas entry against the oracle (directly, or via
+  the dispatch wrapper with ``use_pallas=True``).
+
+These are corpus rules: they cross-reference four files' ASTs, so a kernel
+added without its oracle — or an oracle renamed out from under its test —
+fails the build instead of silently un-validating the kernel.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import PurePosixPath
+
+from repro.analysis.astutil import ModuleInfo
+from repro.analysis.base import Rule, Violation, register
+from repro.analysis.engine import Corpus
+
+
+@dataclasses.dataclass
+class KernelEntry:
+    module_rel: str
+    module_name: str  # e.g. "spline_fit"
+    pallas_fn: str  # e.g. "nat_spline_fit_pallas"
+    line: int
+
+
+@dataclasses.dataclass
+class DispatchEntry:
+    dispatch_fn: str
+    oracles: set  # ref.* names the wrapper calls
+
+
+def _kernel_entries(corpus: Corpus) -> list[KernelEntry]:
+    cfg = corpus.config.kernel_contract
+    kdir = corpus.root / cfg.kernels_dir
+    entries: list[KernelEntry] = []
+    if not kdir.is_dir():
+        return entries
+    for path in sorted(kdir.glob("*.py")):
+        if path.name in cfg.non_kernel_modules:
+            continue
+        rel = (PurePosixPath(cfg.kernels_dir) / path.name).as_posix()
+        mod = corpus.module(rel)
+        if mod is None:
+            continue
+        has_pallas_call = any(
+            (isinstance(n, ast.Attribute) and n.attr == "pallas_call")
+            or (isinstance(n, ast.Name) and n.id == "pallas_call")
+            for n in ast.walk(mod.tree)
+        )
+        if not has_pallas_call:
+            continue
+        for fn in mod.tree.body:
+            if (isinstance(fn, ast.FunctionDef)
+                    and fn.name.endswith("_pallas")
+                    and not fn.name.startswith("_")):
+                entries.append(KernelEntry(rel, path.stem, fn.name, fn.lineno))
+    return entries
+
+
+def _dispatch_map(corpus: Corpus) -> dict[str, DispatchEntry]:
+    """pallas entry name -> its ops.py dispatch wrapper + oracle calls."""
+    cfg = corpus.config.kernel_contract
+    ops = corpus.module(cfg.ops_module)
+    out: dict[str, DispatchEntry] = {}
+    if ops is None:
+        return out
+    for fn in ops.tree.body:
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        imported: list[str] = []
+        oracles: set = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.ImportFrom) and node.module
+                    and node.module.startswith("repro.kernels.")):
+                imported.extend(a.asname or a.name for a in node.names)
+            elif isinstance(node, ast.Attribute):
+                name = ops.dotted_name(node)
+                if name and name.startswith("repro.kernels.ref."):
+                    oracles.add(name.rsplit(".", 1)[1])
+        for name in imported:
+            if name.endswith("_pallas"):
+                out[name] = DispatchEntry(fn.name, oracles)
+    return out
+
+
+def _ref_functions(corpus: Corpus) -> set:
+    cfg = corpus.config.kernel_contract
+    ref = corpus.module(cfg.ref_module)
+    if ref is None:
+        return set()
+    return {fn.name for fn in ref.tree.body if isinstance(fn, ast.FunctionDef)}
+
+
+def _test_functions(corpus: Corpus):
+    """(test name, referenced names, use_pallas-keyword calls) per test."""
+    cfg = corpus.config.kernel_contract
+    tests = []
+    for trel in cfg.test_files:
+        mod = corpus.module(trel)
+        if mod is None:
+            continue
+        for fn in mod.tree.body:
+            if not (isinstance(fn, ast.FunctionDef)
+                    and fn.name.startswith("test")):
+                continue
+            names: set = set()
+            pallas_dispatch_calls: set = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Name):
+                    names.add(node.id)
+                elif isinstance(node, ast.Attribute):
+                    names.add(node.attr)
+                elif isinstance(node, ast.Call):
+                    if any(kw.arg == "use_pallas"
+                           and isinstance(kw.value, ast.Constant)
+                           and kw.value.value is True
+                           for kw in node.keywords):
+                        callee = node.func
+                        if isinstance(callee, ast.Name):
+                            pallas_dispatch_calls.add(callee.id)
+                        elif isinstance(callee, ast.Attribute):
+                            pallas_dispatch_calls.add(callee.attr)
+            tests.append((fn.name, names, pallas_dispatch_calls))
+    return tests
+
+
+def _violation(rule_id: str, entry: KernelEntry, msg: str) -> Violation:
+    return Violation(rule_id, entry.module_rel, entry.line, 0, msg)
+
+
+@register
+class MissingDispatchRule(Rule):
+    rule_id = "KER001"
+    family = "kernel-contract"
+    summary = "every *_pallas kernel entry needs an ops.py dispatch wrapper"
+    scope = "corpus"
+
+    def check_corpus(self, corpus: Corpus) -> list[Violation]:
+        cfg = corpus.config.kernel_contract
+        dispatch = _dispatch_map(corpus)
+        out = []
+        for entry in _kernel_entries(corpus):
+            if entry.pallas_fn not in dispatch:
+                out.append(_violation(
+                    self.rule_id, entry,
+                    f"kernel `{entry.pallas_fn}` has no dispatch wrapper in "
+                    f"{cfg.ops_module}: add a use_pallas= switch so callers "
+                    "never import the Pallas entry directly",
+                ))
+        return out
+
+
+@register
+class MissingOracleRule(Rule):
+    rule_id = "KER002"
+    family = "kernel-contract"
+    summary = ("every kernel's dispatch wrapper must call a ref.py oracle "
+               "that exists")
+
+    scope = "corpus"
+
+    def check_corpus(self, corpus: Corpus) -> list[Violation]:
+        cfg = corpus.config.kernel_contract
+        dispatch = _dispatch_map(corpus)
+        ref_fns = _ref_functions(corpus)
+        out = []
+        for entry in _kernel_entries(corpus):
+            d = dispatch.get(entry.pallas_fn)
+            if d is None:
+                continue  # KER001 already fired
+            live = d.oracles & ref_fns
+            if not live:
+                missing = ", ".join(sorted(d.oracles)) or "none referenced"
+                out.append(_violation(
+                    self.rule_id, entry,
+                    f"dispatch `{d.dispatch_fn}` for `{entry.pallas_fn}` "
+                    f"calls no oracle defined in {cfg.ref_module} "
+                    f"(referenced: {missing}) — every kernel needs an XLA "
+                    "reference implementation as its default path",
+                ))
+        return out
+
+
+@register
+class MissingParityTestRule(Rule):
+    rule_id = "KER003"
+    family = "kernel-contract"
+    summary = ("every kernel needs a parity test (pallas vs oracle) in the "
+               "kernel-parity test file")
+
+    scope = "corpus"
+
+    def check_corpus(self, corpus: Corpus) -> list[Violation]:
+        cfg = corpus.config.kernel_contract
+        dispatch = _dispatch_map(corpus)
+        ref_fns = _ref_functions(corpus)
+        tests = _test_functions(corpus)
+        out = []
+        for entry in _kernel_entries(corpus):
+            d = dispatch.get(entry.pallas_fn)
+            oracles = (d.oracles & ref_fns) if d is not None else set()
+            ok = False
+            for _, names, pallas_dispatch_calls in tests:
+                direct = entry.pallas_fn in names and bool(oracles & names)
+                via_dispatch = d is not None and \
+                    d.dispatch_fn in pallas_dispatch_calls
+                if direct or via_dispatch:
+                    ok = True
+                    break
+            if not ok:
+                files = ", ".join(cfg.test_files)
+                out.append(_violation(
+                    self.rule_id, entry,
+                    f"no parity test for `{entry.pallas_fn}` in {files}: "
+                    "add a test calling the Pallas entry against its ref.py "
+                    "oracle (or the ops wrapper with use_pallas=True) so "
+                    "the kernel-parity CI job actually validates it",
+                ))
+        return out

@@ -1,0 +1,256 @@
+"""JAX tracing-safety rules for ``@jax.jit``-compiled functions.
+
+Under ``jit``, array arguments are tracers: Python-level ``if``/``while``
+on their *values* either raises ``TracerBoolConversionError`` on real
+inputs or — worse — silently bakes the trace-time branch into the compiled
+artifact.  Mutating module or instance state inside a jitted function is
+the same bug in another coat: the mutation happens once at trace time, not
+per call.  Shape/dtype/None-ness branching is fine (those are static at
+trace time), and arguments named in ``static_argnames``/``static_argnums``
+are concrete Python values — both are recognized and exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import ModuleInfo
+from repro.analysis.base import Rule, Violation, register
+
+#: Attribute reads on a tracer that are static at trace time.
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+
+#: Builtins whose result over a tracer is static (or that never concretize).
+STATIC_CALLS = {"len", "isinstance", "getattr", "hasattr", "type", "id"}
+
+_JIT_NAMES = {"jax.jit", "jax.pmap", "jit", "pmap"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def _decorator_jit_statics(module: ModuleInfo, fn: ast.FunctionDef):
+    """(is_jitted, static arg names) from ``fn``'s decorator list."""
+    for dec in fn.decorator_list:
+        name = module.dotted_name(dec)
+        if name in _JIT_NAMES:
+            return True, set()
+        if isinstance(dec, ast.Call):
+            fname = module.dotted_name(dec.func)
+            if fname in _JIT_NAMES:
+                return True, _statics_from_call(dec, fn)
+            if fname in _PARTIAL_NAMES and dec.args:
+                inner = module.dotted_name(dec.args[0])
+                if inner in _JIT_NAMES:
+                    return True, _statics_from_call(dec, fn)
+    return False, set()
+
+
+def _statics_from_call(call: ast.Call, fn: ast.FunctionDef) -> set:
+    statics: set = set()
+    pos_names = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            statics.update(_str_elements(kw.value))
+        elif kw.arg == "static_argnums":
+            for i in _int_elements(kw.value):
+                if 0 <= i < len(pos_names):
+                    statics.add(pos_names[i])
+    return statics
+
+
+def _str_elements(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                yield el.value
+
+
+def _int_elements(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                yield el.value
+
+
+def _call_wrapped_jit_targets(module: ModuleInfo) -> set:
+    """Function names jitted via the call form: ``f = jax.jit(g)`` or
+    ``jax.jit(jax.vmap(g, ...))`` — every plain name inside the jit call's
+    arguments counts (the vmapped callee is still traced)."""
+    targets: set = set()
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if module.dotted_name(node.func) not in _JIT_NAMES:
+            continue
+        for arg in node.args[:1]:
+            for n in ast.walk(arg):
+                if isinstance(n, ast.Name):
+                    targets.add(n.id)
+    return targets
+
+
+def _jitted_functions(module: ModuleInfo):
+    """Yield (fn, static names) for every jit-compiled function def."""
+    call_targets = _call_wrapped_jit_targets(module)
+    for node in ast.walk(module.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted, statics = _decorator_jit_statics(module, node)
+        if jitted:
+            yield node, statics
+        elif node.name in call_targets:
+            yield node, set()
+
+
+def _traced_param_names(fn: ast.AST, statics: set) -> set:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    return {n for n in names if n not in statics and n not in ("self", "cls")}
+
+
+def _name_is_static_use(module: ModuleInfo, name: ast.Name,
+                        stop: ast.AST) -> bool:
+    """True when this tracer reference only feeds trace-time-static
+    information: a shape/dtype attribute, a static builtin, or an
+    ``is (not) None`` identity test."""
+    parent = module.parent(name)
+    if isinstance(parent, ast.Attribute) and parent.attr in STATIC_ATTRS:
+        return True
+    for anc in module.ancestors(name):
+        if (isinstance(anc, ast.Call) and isinstance(anc.func, ast.Name)
+                and anc.func.id in STATIC_CALLS):
+            return True
+        if isinstance(anc, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in anc.ops
+        ):
+            return True
+        if anc is stop:
+            break
+    return False
+
+
+def _expr_offending_names(module: ModuleInfo, expr: ast.AST,
+                          traced: set) -> list[ast.Name]:
+    out = []
+    for node in ast.walk(expr):
+        if (isinstance(node, ast.Name) and node.id in traced
+                and not _name_is_static_use(module, node, stop=expr)):
+            out.append(node)
+    return out
+
+
+def _traced_locals(module: ModuleInfo, fn: ast.AST, traced: set) -> set:
+    """Propagate tracedness through simple local assignments, in source
+    order: ``n = x.shape[0]`` stays static, ``y = x * 2`` becomes traced."""
+    traced = set(traced)
+    # Params of nested functions *passed by name* (to lax.scan / vmap /
+    # lax.cond) are traced too; a nested function only ever called
+    # directly receives whatever the call site passes — typically static
+    # Python values — so its params are not assumed traced.
+    passed_by_name: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and not isinstance(
+            module.parent(node), ast.Call
+        ):
+            passed_by_name.add(node.id)
+        elif isinstance(node, ast.Call):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    passed_by_name.add(arg.id)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn and node.name in passed_by_name:
+            traced |= _traced_param_names(node, set())
+    assigns = [n for n in ast.walk(fn)
+               if isinstance(n, (ast.Assign, ast.AnnAssign, ast.AugAssign))]
+    for stmt in sorted(assigns, key=lambda n: n.lineno):
+        value = stmt.value
+        if value is None:
+            continue
+        if not _expr_offending_names(module, value, traced):
+            continue
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for tgt in targets:
+            for n in ast.walk(tgt):
+                if isinstance(n, ast.Name):
+                    traced.add(n.id)
+    return traced
+
+
+@register
+class TracedBranchRule(Rule):
+    rule_id = "TRACE001"
+    family = "tracing"
+    summary = ("no Python `if`/`while`/`assert` on traced values inside "
+               "jitted functions (use jnp.where / lax.cond / lax.select)")
+
+    def check(self, module: ModuleInfo) -> list[Violation]:
+        out = []
+        for fn, statics in _jitted_functions(module):
+            traced = _traced_locals(
+                module, fn, _traced_param_names(fn, statics))
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                elif isinstance(node, ast.Assert):
+                    test = node.test
+                else:
+                    continue
+                bad = _expr_offending_names(module, test, traced)
+                if bad:
+                    names = ", ".join(sorted({n.id for n in bad}))
+                    kind = type(node).__name__.lower()
+                    out.append(Violation(
+                        self.rule_id, module.rel, node.lineno,
+                        node.col_offset,
+                        f"Python `{kind}` on traced value(s) `{names}` "
+                        f"inside jitted `{fn.name}`: this concretizes a "
+                        "tracer (TracerBoolConversionError on real inputs, "
+                        "or a silently baked-in branch) — use jnp.where / "
+                        "lax.cond, or mark the argument static",
+                    ))
+        return out
+
+
+@register
+class JitStateMutationRule(Rule):
+    rule_id = "TRACE002"
+    family = "tracing"
+    summary = ("no module/instance state mutation inside jitted functions "
+               "(runs once at trace time, not per call)")
+
+    def check(self, module: ModuleInfo) -> list[Violation]:
+        out = []
+        for fn, _ in _jitted_functions(module):
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.Global, ast.Nonlocal)):
+                    out.append(Violation(
+                        self.rule_id, module.rel, node.lineno,
+                        node.col_offset,
+                        f"`{type(node).__name__.lower()}` declaration "
+                        f"inside jitted `{fn.name}`: outer-scope writes "
+                        "happen at trace time only — return the value "
+                        "instead",
+                    ))
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for tgt in targets:
+                        if (isinstance(tgt, ast.Attribute)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id in ("self", "cls")):
+                            out.append(Violation(
+                                self.rule_id, module.rel, tgt.lineno,
+                                tgt.col_offset,
+                                f"write to `{tgt.value.id}.{tgt.attr}` "
+                                f"inside jitted `{fn.name}`: instance "
+                                "state mutates at trace time only — "
+                                "return the new value (pure function)",
+                            ))
+        return out

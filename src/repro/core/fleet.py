@@ -134,10 +134,10 @@ class ReprobeLimiter:
 
     def __init__(self, min_interval_s: float = 5.0, n_active_fn=None):
         self.min_interval_s = min_interval_s
-        self.grants = 0
-        self.denials = 0
+        self.grants = 0  # guarded-by: _lock
+        self.denials = 0  # guarded-by: _lock
         self._n_active_fn = n_active_fn  # called with now_s; tenants live then
-        self._last: float | None = None
+        self._last: float | None = None  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def __call__(self, now_s: float) -> bool:
@@ -167,11 +167,11 @@ class _FleetClock:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._clocks: dict[int, float] = {}
-        self._admits: dict[int, float] = {}
-        self._done: set[int] = set()
-        self._in_flight: int | None = None
-        self._events: dict[int, threading.Event] = {}  # waiting tenants
+        self._clocks: dict[int, float] = {}  # guarded-by: _lock
+        self._admits: dict[int, float] = {}  # guarded-by: _lock
+        self._done: set[int] = set()  # guarded-by: _lock
+        self._in_flight: int | None = None  # guarded-by: _lock
+        self._events: dict[int, threading.Event] = {}  # guarded-by: _lock
 
     def admit(self, tenant_id: int, clock0: float) -> None:
         with self._lock:
@@ -203,14 +203,14 @@ class _FleetClock:
                 and (tid not in self._done or clk > t_s)
             )
 
-    def _next_up(self):
+    def _next_up(self):  # holds: _lock
         best = None
         for tid, clk in self._clocks.items():
             if tid not in self._done and (best is None or (clk, tid) < best):
                 best = (clk, tid)
         return best
 
-    def _wake_next(self) -> None:
+    def _wake_next(self) -> None:  # holds: _lock
         """Wake only the next-up tenant (lock held).  A next-up tenant with
         no registered event has not reached its ``turn`` call yet; its own
         fast path admits it when it does."""
@@ -391,14 +391,14 @@ class FleetScheduler:
         # wall-clock db.query against a concurrent refit swap.
         admitted_cluster = [None] * n
         admit_events = [threading.Event() for _ in range(n)]
-        threads: list[threading.Thread] = []
-        pending = collections.deque(
+        threads: list[threading.Thread] = []  # guarded-by: admit_lock
+        pending = collections.deque(  # guarded-by: admit_lock
             sorted(range(n), key=lambda i: (reqs[i].start_clock_s, i))
         )
         admit_lock = threading.Lock()
         errors: list[BaseException] = []
-        n_kills = [0]
-        n_recoveries = [0]
+        n_kills = [0]  # guarded-by: admit_lock
+        n_recoveries = [0]  # guarded-by: admit_lock
 
         def admit_next(now_s: float) -> None:
             with admit_lock:

@@ -109,7 +109,11 @@ class OfflineDB:
         for e, k in zip(new_entries, assignments):
             self.clusters[k].entries.append(e)
             touched.add(int(k))
-        for k in touched:
+        # Refit in ascending cluster order: each refit is independent today,
+        # but the publish order is observable (e.g. shared-kernel compile
+        # caches, future incremental-refresh hooks), so it must not be left
+        # to set hashing.
+        for k in sorted(touched):
             ck = self.clusters[k]
             surfaces = _fit_cluster_surfaces(ck.entries, self.n_load_bins,
                                              self.bounds, batched=batched_fit,
@@ -170,6 +174,9 @@ def offline_analysis(entries: list[LogEntry], *,
     batched JAX path above ``clustering.BATCHED_THRESHOLD`` rows, so
     million-entry logs never hit the O(n^2)/Python-loop numpy path.
     """
+    # repro-lint: disable=DET001 -- fit_seconds is wall-time observability
+    # metadata (how long discovery took on this host); it never feeds a
+    # tuning decision, a trace, or any simulated-time computation.
     t0 = time.perf_counter()
     X = np.stack([e.features() for e in entries])
     cm = fit_clusters(X, method=clustering, seed=seed, batched=batched,
@@ -184,6 +191,7 @@ def offline_analysis(entries: list[LogEntry], *,
         clusters.append(ClusterKnowledge(cm.centroids[k], surfaces, region,
                                          sel, region_seed=seed + k))
     return OfflineDB(clusters, cm, bounds, n_load_bins,
+                     # repro-lint: disable=DET001 -- fit_seconds metadata (see t0)
                      time.perf_counter() - t0)
 
 

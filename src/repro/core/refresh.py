@@ -134,23 +134,27 @@ class KnowledgeRefresher:
         self.db = db
         self.link = link
         self.config = config or RefreshConfig()
-        self.staleness = {k: ClusterStaleness() for k in range(len(db.clusters))}
-        self.refreshes = 0  # refresh rounds actually run
-        self.entries_folded = 0  # entries folded into the DB so far
-        self._pending: list[LogEntry] = []
-        self._pending_clusters: list[int] = []  # precomputed assignments
-        self._completions_since = 0
-        self._last_refresh_s: float | None = None
+        self.staleness = {  # guarded-by: _lock
+            k: ClusterStaleness() for k in range(len(db.clusters))
+        }
+        self.refreshes = 0  # guarded-by: _lock -- refresh rounds actually run
+        self.entries_folded = 0  # guarded-by: _lock -- entries folded so far
+        self._pending: list[LogEntry] = []  # guarded-by: _lock
+        self._pending_clusters: list[int] = []  # guarded-by: _lock
+        self._completions_since = 0  # guarded-by: _lock
+        self._last_refresh_s: float | None = None  # guarded-by: _lock
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
     @property
     def pending_entries(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
     def stalest_cluster_s(self, now_s: float) -> float:
         """Worst per-cluster staleness at ``now_s`` (monitoring hook)."""
-        return max(s.staleness_s(now_s) for s in self.staleness.values())
+        with self._lock:
+            return max(s.staleness_s(now_s) for s in self.staleness.values())
 
     # ------------------------------------------------------------------ #
     def observe(
@@ -196,7 +200,7 @@ class KnowledgeRefresher:
             return self._refresh_locked(now_s)
 
     # ------------------------------------------------------------------ #
-    def _due(self, now_s: float) -> bool:
+    def _due(self, now_s: float) -> bool:  # holds: _lock
         if len(self._pending) < self.config.min_entries:
             return False
         if (
@@ -209,7 +213,7 @@ class KnowledgeRefresher:
             return last is None or now_s - last >= self.config.every_sim_s
         return False
 
-    def _refresh_locked(self, now_s: float) -> set[int]:
+    def _refresh_locked(self, now_s: float) -> set[int]:  # holds: _lock
         if not self._pending:
             return set()
         touched = self.db.update(

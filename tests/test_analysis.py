@@ -1,0 +1,523 @@
+"""repro.analysis: fixture golden tests per rule family (flagged / clean /
+suppressed), the seeded real-bug patterns from PRs 2/3/5, suppression
+semantics, CLI behaviour, and the tier-1 self-scan of ``src/``."""
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import default_config, permissive_config, run_analysis
+from repro.analysis.cli import main as cli_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def scan(tmp_path, files, *, rules=None, scoped=False):
+    """Write ``{rel: source}`` fixtures under ``tmp_path`` and analyze them."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    cfg = default_config() if scoped else permissive_config()
+    return run_analysis([tmp_path], root=tmp_path, config=cfg, rule_ids=rules)
+
+
+def fired(result):
+    return [v.rule for v in result.violations]
+
+
+# ========================= determinism (DET*) ========================== #
+def test_det001_catches_wall_clock_in_sim_path(tmp_path):
+    """The PR 2 bug class: a wall-clock read racing the simulated clock in
+    an admission decision."""
+    res = scan(tmp_path, {"src/repro/core/admit.py": """
+        import time
+
+        def admit(env):
+            env.admitted_at = time.time()
+            return env
+    """}, scoped=True)
+    assert fired(res) == ["DET001"]
+    assert "wall-clock" in res.violations[0].message
+    assert res.violations[0].line == 5
+
+
+def test_det001_resolves_import_aliases(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        from time import perf_counter
+        from datetime import datetime
+
+        def f():
+            return perf_counter(), datetime.now()
+    """}, rules={"DET001"})
+    assert fired(res) == ["DET001", "DET001"]
+
+
+def test_det001_allows_wall_clock_outside_sim_path(tmp_path):
+    """benchmarks/ measures real time on purpose — out of scope."""
+    res = scan(tmp_path, {"benchmarks/bench.py": """
+        import time
+
+        def bench():
+            return time.perf_counter()
+    """}, scoped=True)
+    assert res.ok
+
+
+def test_det002_catches_unseeded_refit_rng(tmp_path):
+    """The PR 3 bug class: a refit RNG stream nobody seeded."""
+    res = scan(tmp_path, {"src/repro/core/regions.py": """
+        import numpy as np
+
+        def identify_regions(surfaces):
+            rng = np.random.default_rng()
+            return rng.permutation(len(surfaces))
+    """}, scoped=True)
+    assert fired(res) == ["DET002"]
+    assert "seed" in res.violations[0].message
+
+
+def test_det002_seeded_rng_and_global_state_calls(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import numpy as np
+        import random
+
+        def good(seed):
+            return np.random.default_rng(seed).normal()
+
+        def bad():
+            return np.random.normal() + random.random()
+    """}, rules={"DET002"})
+    assert fired(res) == ["DET002", "DET002"]
+    assert all(v.line == 9 for v in res.violations)
+
+
+def test_det003_set_iteration_feeding_ordered_state(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        def refit(touched):
+            touched = set(touched)
+            out = []
+            for k in touched:
+                out.append(k)
+            return out
+    """}, rules={"DET003"})
+    assert fired(res) == ["DET003"]
+    assert "sorted" in res.violations[0].message
+
+
+def test_det003_sorted_and_reducers_are_clean(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        def refit(touched):
+            touched = set(touched)
+            total = sum(k for k in touched)
+            best = max(touched)
+            return [k for k in sorted(touched)], total, best
+    """}, rules={"DET003"})
+    assert res.ok
+
+
+def test_det004_id_ordering(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        def order(items):
+            return sorted(items, key=lambda t: id(t))
+    """}, rules={"DET004"})
+    assert fired(res) == ["DET004"]
+
+
+# ============================ locks (LOCK*) ============================ #
+def test_lock001_guarded_class_field(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import threading
+
+        class Limiter:
+            def __init__(self):
+                self.grants = 0  # guarded-by: _lock
+                self._lock = threading.Lock()
+
+            def ok(self):
+                with self._lock:
+                    self.grants += 1
+
+            def bad(self):
+                self.grants += 1
+
+            def _bump(self):  # holds: _lock
+                self.grants += 1
+    """}, rules={"LOCK001"})
+    assert fired(res) == ["LOCK001"]
+    v = res.violations[0]
+    assert "Limiter.bad" in v.message and v.line == 14
+
+
+def test_lock001_catches_guarded_local_outside_admit_lock(tmp_path):
+    """The PR 5 bug class: a worker closure touching scheduler attempt
+    state without the admission lock."""
+    res = scan(tmp_path, {"src/repro/core/sched.py": """
+        import threading
+
+        def run(n):
+            pending = list(range(n))  # guarded-by: admit_lock
+            admit_lock = threading.Lock()
+
+            def worker():
+                return pending.pop()
+
+            def good_worker():
+                with admit_lock:
+                    return pending.pop()
+
+            pending.append(n)  # owner body: single-threaded epilogue
+            return worker, good_worker
+    """}, scoped=True, rules={"LOCK001"})
+    assert fired(res) == ["LOCK001"]
+    v = res.violations[0]
+    assert "worker" in v.message and v.line == 9
+
+
+def test_lock002_annotation_names_unknown_lock(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import threading
+
+        class C:
+            def __init__(self):
+                self.x = 0  # guarded-by: _nope
+                self._lock = threading.Lock()
+
+            def m(self):
+                with self._lock:
+                    return self.x
+    """}, rules={"LOCK002"})
+    assert fired(res) == ["LOCK002"]
+    assert "_nope" in res.violations[0].message
+
+
+# ====================== kernel contract (KER*) ========================= #
+def _kernel_corpus(**overrides):
+    files = {
+        "src/repro/kernels/__init__.py": "",
+        "src/repro/kernels/foo.py": """
+            from jax.experimental import pallas as pl
+
+            def foo_pallas(x, interpret=False):
+                return pl.pallas_call(lambda x_ref, o_ref: None)(x)
+        """,
+        "src/repro/kernels/ref.py": """
+            def foo_ref(x):
+                return x
+        """,
+        "src/repro/kernels/ops.py": """
+            from repro.kernels import ref
+
+            def foo(x, use_pallas=False, interpret=False):
+                if use_pallas:
+                    from repro.kernels.foo import foo_pallas
+                    return foo_pallas(x, interpret=interpret)
+                return ref.foo_ref(x)
+        """,
+        "tests/test_kernels.py": """
+            from repro.kernels.foo import foo_pallas
+            from repro.kernels import ref
+
+            def test_foo_parity():
+                assert foo_pallas(1, interpret=True) == ref.foo_ref(1)
+        """,
+    }
+    files.update(overrides)
+    return files
+
+
+def test_kernel_contract_complete_corpus_is_clean(tmp_path):
+    res = scan(tmp_path, _kernel_corpus(),
+               rules={"KER001", "KER002", "KER003"})
+    assert res.ok
+
+
+def test_ker001_kernel_without_dispatch(tmp_path):
+    files = _kernel_corpus()
+    files["src/repro/kernels/ops.py"] = """
+        from repro.kernels import ref
+
+        def unrelated(x):
+            return ref.foo_ref(x)
+    """
+    res = scan(tmp_path, files, rules={"KER001"})
+    assert fired(res) == ["KER001"]
+    v = res.violations[0]
+    assert v.path == "src/repro/kernels/foo.py" and "foo_pallas" in v.message
+
+
+def test_ker002_catches_kernel_with_dead_oracle(tmp_path):
+    """The drift mode the contract exists for: the oracle renamed (or never
+    written) out from under the dispatch wrapper."""
+    files = _kernel_corpus()
+    files["src/repro/kernels/ref.py"] = """
+        def unrelated_ref(x):
+            return x
+    """
+    res = scan(tmp_path, files, rules={"KER002"})
+    assert fired(res) == ["KER002"]
+    assert "reference implementation" in res.violations[0].message
+
+
+def test_ker003_catches_kernel_without_parity_test(tmp_path):
+    files = _kernel_corpus()
+    files["tests/test_kernels.py"] = """
+        def test_something_else():
+            assert True
+    """
+    res = scan(tmp_path, files, rules={"KER003"})
+    assert fired(res) == ["KER003"]
+    assert "parity test" in res.violations[0].message
+
+
+def test_ker003_accepts_parity_via_dispatch_use_pallas(tmp_path):
+    files = _kernel_corpus()
+    files["tests/test_kernels.py"] = """
+        from repro.kernels.ops import foo
+
+        def test_foo_dispatch_parity():
+            assert foo(1) == foo(1, use_pallas=True, interpret=True)
+    """
+    res = scan(tmp_path, files, rules={"KER003"})
+    assert res.ok
+
+
+# =========================== tracing (TRACE*) ========================== #
+def test_trace001_branch_on_traced_value(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+    """}, rules={"TRACE001"})
+    assert fired(res) == ["TRACE001"]
+    assert "`step`" in res.violations[0].message
+
+
+def test_trace001_static_uses_are_clean(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import functools
+
+        import jax
+
+        @jax.jit
+        def by_shape(x):
+            if x.shape[0] > 4:
+                return x
+            return x[:4]
+
+        @functools.partial(jax.jit, static_argnames=("flag",))
+        def by_static(x, flag):
+            if flag:
+                return x
+            return -x
+
+        @jax.jit
+        def by_none(x, y):
+            if y is None:
+                return x
+            return x + y
+    """}, rules={"TRACE001"})
+    assert res.ok
+
+
+def test_trace001_call_form_jit(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import jax
+
+        def _step(x):
+            while x > 0:
+                x = x - 1
+            return x
+
+        step = jax.jit(jax.vmap(_step))
+    """}, rules={"TRACE001"})
+    assert fired(res) == ["TRACE001"]
+
+
+def test_trace002_state_mutation_under_jit(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import jax
+
+        class Model:
+            @jax.jit
+            def update(self, x):
+                self.cache = x
+                return x
+
+        def _g(x):
+            global COUNT
+            COUNT = COUNT + 1
+            return x
+
+        g = jax.jit(_g)
+    """}, rules={"TRACE002"})
+    assert fired(res) == ["TRACE002", "TRACE002"]
+    assert "self.cache" in res.violations[0].message
+
+
+# ================== suppressions & meta rules (SUP*) =================== #
+def test_suppression_with_reason_quiets_finding(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=DET001 -- observability only
+    """}, rules={"DET001", "SUP001"})
+    assert res.ok
+    assert [v.rule for v in res.suppressed] == ["DET001"]
+    assert res.suppressed[0].suppress_reason == "observability only"
+
+
+def test_own_line_suppression_governs_next_code_line(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import time
+
+        def f():
+            # repro-lint: disable=DET001 -- wall-time metadata, never
+            # feeds a tuning decision or a trace
+            return time.time()
+    """}, rules={"DET001", "SUP001"})
+    assert res.ok and [v.rule for v in res.suppressed] == ["DET001"]
+
+
+def test_sup001_bare_suppression_is_flagged_but_still_suppresses(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=DET001
+    """}, rules={"DET001", "SUP001"})
+    assert fired(res) == ["SUP001"]
+    assert [v.rule for v in res.suppressed] == ["DET001"]
+
+
+def test_sup001_cannot_suppress_itself(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=*
+    """}, rules={"DET001", "SUP001"})
+    assert fired(res) == ["SUP001"]
+
+
+def test_wildcard_suppression_with_reason(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=* -- fixture exercising everything
+    """}, rules={"DET001", "SUP001"})
+    assert res.ok and [v.rule for v in res.suppressed] == ["DET001"]
+
+
+def test_unrelated_suppression_does_not_quiet(tmp_path):
+    res = scan(tmp_path, {"mod.py": """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=DET002 -- wrong rule
+    """}, rules={"DET001"})
+    assert fired(res) == ["DET001"]
+
+
+# ================================ CLI ================================== #
+def _write(tmp_path, rel, src):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return p
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("DET001", "DET002", "DET003", "DET004", "LOCK001", "LOCK002",
+                "KER001", "KER002", "KER003", "TRACE001", "TRACE002",
+                "SUP001"):
+        assert rid in out
+
+
+def test_cli_json_output_and_exit_code(tmp_path, capsys):
+    _write(tmp_path, "src/repro/core/x.py", """
+        import time
+
+        def f():
+            return time.time()
+    """)
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--format", "json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is False
+    assert payload["violations"][0]["rule"] == "DET001"
+    assert payload["violations"][0]["path"] == "src/repro/core/x.py"
+
+
+def test_cli_out_file_and_clean_exit(tmp_path, capsys):
+    _write(tmp_path, "src/repro/core/x.py", """
+        def f(now_s):
+            return now_s + 1.0
+    """)
+    out = tmp_path / "report.json"
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--format", "json", "--out", str(out)])
+    capsys.readouterr()
+    assert rc == 0
+    assert json.loads(out.read_text())["ok"] is True
+
+
+def test_cli_no_scope_applies_rules_everywhere(tmp_path, capsys):
+    _write(tmp_path, "scratch.py", """
+        import time
+
+        def f():
+            return time.time()
+    """)
+    rc = cli_main([str(tmp_path / "scratch.py"), "--root", str(tmp_path),
+                   "--no-scope"])
+    capsys.readouterr()
+    assert rc == 1
+
+
+def test_cli_rules_filter(tmp_path, capsys):
+    _write(tmp_path, "scratch.py", """
+        import time
+
+        def f():
+            return time.time()
+    """)
+    rc = cli_main([str(tmp_path / "scratch.py"), "--root", str(tmp_path),
+                   "--no-scope", "--rules", "DET003"])
+    capsys.readouterr()
+    assert rc == 0
+
+
+def test_cli_usage_errors(tmp_path, capsys):
+    assert cli_main(["--rules", "NOPE999"]) == 2
+    assert cli_main([str(tmp_path / "missing_dir")]) == 2
+    capsys.readouterr()
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    res = scan(tmp_path, {"broken.py": "def f(:\n    pass\n"})
+    assert fired(res) == ["PARSE"]
+
+
+# ====================== tier-1 self-scan of src/ ======================= #
+def test_self_scan_src_is_clean():
+    """The analyzer's own acceptance bar: ``python -m repro.analysis src``
+    exits 0 on the tree it ships in."""
+    res = run_analysis([REPO_ROOT / "src"], root=REPO_ROOT,
+                       config=default_config())
+    assert res.ok, "\n".join(v.format() for v in res.violations)
+    assert res.files_scanned > 50
+    # every suppression in the tree documents why it is safe
+    for v in res.suppressed:
+        assert v.suppress_reason, v.format()

@@ -222,6 +222,43 @@ def test_nat_spline_fit_coeffs_interpolate_knots():
     np.testing.assert_allclose(got, Y, rtol=1e-4, atol=1e-4)
 
 
+# ------------------ batched transfer-surface selection ------------------ #
+SELECT_CASES = [
+    # (S, G, B, P, bb): non-block-multiple B exercises the padding path
+    (3, 64, 17, 4, 8),
+    (5, 256, 32, 16, 8),
+    (2, 128, 7, 5, 4),
+]
+
+
+@pytest.mark.parametrize("case", SELECT_CASES)
+def test_transfer_select_pallas_matches_ref(case):
+    from repro.kernels.transfer_select import batched_predict_argmax_pallas
+
+    S, G, B, P, bb = case
+    values = RNG.normal(size=(S, G)).astype(np.float32) * 5.0
+    idx = RNG.integers(0, G, size=(B, P)).astype(np.int32)
+    best_r, argk_r = ref.batched_predict_argmax_ref(values, idx)
+    best_p, argk_p = batched_predict_argmax_pallas(values, idx, bb=bb,
+                                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(best_p), np.asarray(best_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(argk_p), np.asarray(argk_r))
+
+
+def test_transfer_select_ops_dispatch():
+    from repro.kernels.ops import transfer_predict_argmax
+
+    values = RNG.normal(size=(3, 64)).astype(np.float32)
+    idx = RNG.integers(0, 64, size=(9, 4)).astype(np.int32)
+    best_ref, argk_ref = transfer_predict_argmax(values, idx)
+    best_pal, argk_pal = transfer_predict_argmax(values, idx, use_pallas=True,
+                                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(best_pal), np.asarray(best_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(argk_pal), np.asarray(argk_ref))
+
+
 # ------------------ batched nearest-centroid assignment ----------------- #
 ASSIGN_CASES = [
     # (N, M, d): non-block-multiple N exercises the padding path

@@ -172,6 +172,27 @@ def test_surface_stack_matches_fresh_dense_eval_after_update(db):
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
 
 
+def test_update_publishes_refits_in_ascending_cluster_order(db):
+    """Refit publish order must follow cluster index, not set-hash order
+    (DET003: the swap order is observable via compile caches and future
+    incremental-refresh hooks)."""
+
+    class RecordingList(list):
+        published = []
+
+        def __setitem__(self, k, v):
+            self.published.append(k)
+            super().__setitem__(k, v)
+
+    db.clusters = RecordingList(db.clusters)
+    fresh = generate_history(
+        make_testbed("xsede", seed=11), days=1, transfers_per_day=60, seed=42
+    )
+    touched = db.update(fresh)
+    assert len(touched) >= 2  # order is only meaningful with several refits
+    assert RecordingList.published == sorted(touched)
+
+
 def test_batched_refit_matches_scalar_refit(history):
     a = _db(history)
     b = _db(history)
