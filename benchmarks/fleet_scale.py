@@ -5,7 +5,12 @@ twice — a naive policy admitting all N tenants at once, and the
 contention-aware admission controller (batched demand prediction + queueing
 behind finishing transfers).  Each run reports aggregate goodput, p50/p99
 convergence sample counts, mean accuracy against the single-tenant optimum,
-and how many re-probe storms the fleet-wide limiter damped.  A final
+and how many re-probe storms the fleet-wide limiter damped.
+
+Two further rows exercise the vectorized event engine: a small-N run that
+must be bit-identical to the threaded oracle, and a scale row (smoke:
+N=2,000; full: N=100,000) reporting sessions/sec and events/sec — fleet
+sizes the thread-per-session scheduler cannot reach.  A final
 micro-benchmark times the batched (vmapped) surface-scoring path against the
 scalar per-surface loop it replaces.
 """
@@ -17,17 +22,20 @@ import time
 import numpy as np
 
 from repro.core import (
-    FleetConfig,
+    EngineConfig,
     FleetRequest,
-    FleetScheduler,
     TransferTuner,
     TunerConfig,
+    run_fleet,
 )
+from repro.core.engine import VectorizedFleetEngine
 from repro.netsim import TransferParams, generate_history, make_dataset, make_testbed
 
 FLEET_SIZES = [1, 8, 64, 256]
 SMOKE_SIZES = [1, 8]
 CLASSES = ["small", "medium", "large"]
+PARITY_N = 8  # oracle-parity fleet size for the vectorized engine row
+SCALE_N = {"smoke": 2_000, "full": 100_000}
 
 
 def _requests(n: int, seed0: int = 500) -> list[FleetRequest]:
@@ -50,13 +58,60 @@ def run(smoke: bool = False) -> dict:
     out: dict = {}
     for n in SMOKE_SIZES if smoke else FLEET_SIZES:
         reqs = _requests(n)
-        naive = FleetScheduler(db, config=FleetConfig(max_concurrent=n))
         out[n] = {
-            "naive": naive.run(list(reqs)),
-            "admission": FleetScheduler(db, config=FleetConfig()).run(list(reqs)),
+            "naive": run_fleet(db, list(reqs), EngineConfig(max_concurrent=n)),
+            "admission": run_fleet(db, list(reqs), EngineConfig()),
         }
+    out["vectorized_parity"] = _check_parity(db)
+    out["vectorized_scale"] = _bench_scale(db, SCALE_N["smoke" if smoke else "full"])
     out["batched_scoring"] = _bench_batched(db)
     return out
+
+
+def _check_parity(db) -> dict:
+    """The vectorized engine must reproduce the threaded oracle's
+    FleetReport bit-for-bit at parity scale — the same guarantee
+    tests/test_engine_vec.py locks in, asserted here so a benchmark run
+    can never quote a sessions/sec number from a diverged engine."""
+    reqs = _requests(PARITY_N)
+    threaded = run_fleet(
+        db, list(reqs), EngineConfig(engine="threaded", max_concurrent=4)
+    )
+    vectorized = run_fleet(
+        db, list(reqs), EngineConfig(engine="vectorized", max_concurrent=4)
+    )
+    assert vectorized == threaded, "vectorized engine diverged from oracle"
+    return {"n": PARITY_N, "bit_identical": True}
+
+
+def _bench_scale(db, n: int) -> dict:
+    """Sessions/sec for one N-session fleet through the vectorized engine.
+
+    All sessions admitted at once (the admission-controller comparison
+    lives in the small-N rows); per-request single-tenant optima are
+    skipped — at N=1e5 that scoring pass would dwarf the engine itself.
+    """
+    reqs = _requests(n)
+    engine = VectorizedFleetEngine(
+        db,
+        EngineConfig(
+            engine="vectorized",
+            max_concurrent=n,
+            score_vs_single=False,
+        ),
+    )
+    t0 = time.perf_counter()
+    fleet = engine.run(reqs)
+    wall_s = time.perf_counter() - t0
+    assert len(fleet.reports) == n
+    return {
+        "n": n,
+        "wall_s": wall_s,
+        "sessions_per_s": n / wall_s,
+        "events": engine.events_processed,
+        "events_per_s": engine.events_processed / wall_s,
+        "goodput_mbps": fleet.goodput_mbps,
+    }
 
 
 def _bench_batched(db) -> dict:
@@ -112,6 +167,18 @@ def main(smoke: bool = False):
             assert fr.samples_p99 <= max_samples + 0.01, (
                 "convergence blew the sample budget"
             )
+    par = out["vectorized_parity"]
+    print(
+        f"fleet_vectorized_parity_N{par['n']},0,"
+        f"bit_identical={par['bit_identical']}"
+    )
+    sc = out["vectorized_scale"]
+    print(
+        f"fleet_scale_vec_N{sc['n']},{sc['wall_s'] * 1e6:.0f},"
+        f"sessions_per_s={sc['sessions_per_s']:.0f} "
+        f"events={sc['events']} ev_per_s={sc['events_per_s']:.0f} "
+        f"goodput={sc['goodput_mbps']:.0f}Mbps"
+    )
     b = out["batched_scoring"]
     print(
         f"fleet_batched_scoring,{b['batched_us']:.1f},"

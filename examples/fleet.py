@@ -2,17 +2,20 @@
 
 Fits the offline knowledge base once, then runs an 8-tenant fleet over the
 XSEDE testbed twice — naive all-at-once admission vs the contention-aware
-admission controller — and prints the roll-up each produces.
+admission controller — and prints the roll-up each produces.  Both runs go
+through the unified ``run_fleet`` facade; flip ``engine="vectorized"`` in
+the ``EngineConfig`` to use the event-loop engine that scales to 1e5+
+sessions (bit-identical results at this size).
 
     PYTHONPATH=src python examples/fleet.py
 """
 
 from repro.core import (
-    FleetConfig,
+    EngineConfig,
     FleetRequest,
-    FleetScheduler,
     TransferTuner,
     TunerConfig,
+    run_fleet,
 )
 from repro.netsim import generate_history, make_dataset, make_testbed
 
@@ -34,10 +37,10 @@ requests = [
 
 print(f"=== {N}-tenant fleet on xsede (shared 10 Gbps link) ===")
 for label, config in [
-    ("naive (admit all at once)", FleetConfig(max_concurrent=N)),
-    ("contention-aware admission", FleetConfig()),
+    ("naive (admit all at once)", EngineConfig(max_concurrent=N)),
+    ("contention-aware admission", EngineConfig()),
 ]:
-    fleet = FleetScheduler(db, config=config).run(list(requests))
+    fleet = run_fleet(db, list(requests), config)
     print(
         f"  {label:28s} cap={fleet.admitted_concurrency} "
         f"goodput={fleet.goodput_mbps:,.0f} Mbps "

@@ -25,6 +25,9 @@ from repro.core.fleet import (
     FleetConfig, FleetReport, FleetRequest, FleetScheduler, ReprobeLimiter,
     SessionOutcome,
 )
+from repro.core.engine import (
+    EngineConfig, VectorEventHeap, VectorizedFleetEngine, run_fleet,
+)
 
 __all__ = [
     "CubicSpline1D", "BicubicSpline", "TricubicSurface", "PolySurface",
@@ -39,4 +42,5 @@ __all__ = [
     "MultiNetworkRefresher", "RefreshConfig", "session_log_entries",
     "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
     "ReprobeLimiter", "SessionOutcome",
+    "EngineConfig", "VectorEventHeap", "VectorizedFleetEngine", "run_fleet",
 ]

@@ -1,0 +1,31 @@
+"""Unified fleet engines: one ``run_fleet`` facade over two schedulers.
+
+``engine="threaded"`` is the original thread-per-session oracle
+(``repro.core.fleet.FleetScheduler``); ``engine="vectorized"`` is the
+event-loop engine that produces bit-identical ``FleetReport``s at parity
+scale and runs 1e5+ concurrent sessions (``repro.core.engine.vectorized``).
+"""
+
+from repro.core.engine.api import (
+    VALID_CONTENTION,
+    VALID_ENGINES,
+    EngineConfig,
+    run_fleet,
+)
+from repro.core.engine.heap import VectorEventHeap
+from repro.core.engine.vectorized import (
+    AUTO_CONTENTION_CUTOVER,
+    FleetStateArrays,
+    VectorizedFleetEngine,
+)
+
+__all__ = [
+    "AUTO_CONTENTION_CUTOVER",
+    "EngineConfig",
+    "FleetStateArrays",
+    "VALID_CONTENTION",
+    "VALID_ENGINES",
+    "VectorEventHeap",
+    "VectorizedFleetEngine",
+    "run_fleet",
+]

@@ -1,0 +1,74 @@
+"""Event heap of the vectorized fleet engine, deterministic tie-breaking.
+
+The engine schedules every session interaction (probe, bulk chunk,
+re-probe-gate consultation, finish bookkeeping) as an event keyed by
+``(time_s, slot_id)``.  Keys are compared lexicographically, so two events at
+the same simulated instant always pop in slot order — the same tie rule as
+the threaded scheduler's ``_FleetClock`` (min clock, ties by tenant id),
+which is what makes the two engines interleave identically.
+
+Scalar pushes and pops ride CPython's C-implemented ``heapq`` over ``(time,
+slot)`` tuples — profiling the engine at N=2e4 showed a hand-rolled
+numpy-scalar sift spending half the run in element access, while ``heapq``'s
+tuple comparisons run at C speed.  Batch insertion stays vectorized: an
+admission wave is ``np.lexsort``-ed in one shot (a sorted array satisfies
+the heap invariant) instead of N sift-ups.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+class VectorEventHeap:
+    """Min-heap over ``(time_s, slot_id)`` keys.
+
+    Pops are globally ordered: strictly by time, and by ascending slot id
+    among equal times.  Insertion order never influences pop order, which
+    ``tests/test_engine_heap.py`` locks in.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        # capacity is advisory (list storage grows itself); accepted so
+        # callers can express expected fleet size without a special case.
+        del capacity
+        self._heap: list[tuple[float, int]] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    # ------------------------------------------------------------------ #
+    def push(self, time_s: float, slot_id: int) -> None:
+        heapq.heappush(self._heap, (float(time_s), int(slot_id)))
+
+    def push_batch(self, times_s, slot_ids) -> None:
+        """Insert many events at once.
+
+        On an empty heap the batch is lexsorted in — one vectorized sort
+        instead of N sift-ups — which is how the engine seeds an admission
+        wave.  On a non-empty heap it falls back to scalar pushes.
+        """
+        times_s = np.asarray(times_s, np.float64)
+        slot_ids = np.asarray(slot_ids, np.int64)
+        if times_s.shape != slot_ids.shape or times_s.ndim != 1:
+            raise ValueError("times_s and slot_ids must be equal-length 1-D")
+        if times_s.shape[0] == 0:
+            return
+        if not self._heap:
+            order = np.lexsort((slot_ids, times_s))
+            self._heap = list(zip(times_s[order].tolist(), slot_ids[order].tolist()))
+            return
+        for t, i in zip(times_s.tolist(), slot_ids.tolist()):
+            heapq.heappush(self._heap, (t, i))
+
+    def peek(self) -> tuple[float, int]:
+        if not self._heap:
+            raise IndexError("peek from an empty VectorEventHeap")
+        return self._heap[0]
+
+    def pop(self) -> tuple[float, int]:
+        if not self._heap:
+            raise IndexError("pop from an empty VectorEventHeap")
+        return heapq.heappop(self._heap)

@@ -252,6 +252,165 @@ class _FleetClock:
 _OPT_CACHE: dict = {}
 
 
+def predict_demands(
+    db: OfflineDB,
+    requests: list[FleetRequest],
+    *,
+    testbed: str = "xsede",
+    use_pallas: bool = False,
+) -> np.ndarray:
+    """Predicted per-request demand (Mbit/s) via the batched surface path.
+
+    Requests are grouped by cluster and each cluster's surface stack is
+    scored through ``SurfaceStack.best_candidates`` (vmapped gather or the
+    Pallas kernel).  Demand is a pure function of the cluster — the
+    candidate set is the cluster's own argmax points — so each group is
+    scored once and broadcast to its requests.  The median-load surface's
+    best candidate is what the admission controller budgets against.
+    """
+    link = TESTBEDS[testbed]
+    demands = np.zeros(len(requests))
+    groups: dict[int, list[int]] = {}
+    for i, req in enumerate(requests):
+        k = db.cluster_model.assign(request_features(link, req.dataset))
+        groups.setdefault(int(k), []).append(i)
+    for k, idxs in groups.items():
+        stack = db.clusters[k].surface_stack(db.bounds)
+        cand = stack.argmax_pts[None, :, :]  # one batch row per cluster
+        best, _ = stack.best_candidates(cand, use_pallas=use_pallas)
+        demands[idxs] = float(np.asarray(best)[0, stack.n_surfaces // 2])
+    return demands
+
+
+def auto_concurrency(
+    db: OfflineDB,
+    requests: list[FleetRequest],
+    link,
+    *,
+    testbed: str = "xsede",
+    overcommit: float = 2.0,
+    use_pallas: bool = False,
+) -> int:
+    """Admission cap from predicted demand: how many median-demand sessions
+    fit under the link's capacity times ``overcommit``."""
+    demands = predict_demands(db, requests, testbed=testbed, use_pallas=use_pallas)
+    med = float(np.median(demands))
+    if med <= 0.0:
+        return len(requests)
+    cap = int(overcommit * link.bandwidth_mbps / med)
+    return max(1, min(cap, len(requests)))
+
+
+def single_tenant_optimum(
+    db: OfflineDB, testbed: str, req: FleetRequest, at_clock_s: float
+) -> float:
+    """Steady rate of the grid-search optimum a lone tenant would achieve on
+    a fresh testbed at ``at_clock_s`` (memoized in ``_OPT_CACHE``)."""
+    ds = req.dataset
+    key = (
+        testbed,
+        req.env_seed,
+        req.constant_load,
+        req.traffic,
+        ds,
+        at_clock_s,
+    )
+    if key not in _OPT_CACHE:
+        if req.traffic is not None:
+            env = Environment(TESTBEDS[testbed], req.traffic, seed=req.env_seed)
+        else:
+            env = make_testbed(
+                testbed,
+                seed=req.env_seed,
+                constant_load=req.constant_load,
+            )
+        env.clock_s = at_clock_s
+        _, opt = env.optimal(db.bounds, ds.avg_file_mb, ds.n_files)
+        _OPT_CACHE[key] = opt
+    return _OPT_CACHE[key]
+
+
+def assemble_fleet_report(
+    db: OfflineDB,
+    testbed: str,
+    requests: list[FleetRequest],
+    *,
+    reqs: list[FleetRequest],
+    origin: list[int],
+    attempt_no: list[int],
+    reports: list[TransferReport | None],
+    end_clock: list[float],
+    admit_time: list[float],
+    score_vs_single: bool,
+    reprobe_grants: int,
+    reprobe_denials: int,
+    admitted_concurrency: int,
+    refreshes: int = 0,
+    refreshed_entries: int = 0,
+    kills: int = 0,
+    recoveries: int = 0,
+) -> FleetReport:
+    """Roll attempt-indexed session state up into a ``FleetReport``.
+
+    Shared verbatim by the threaded scheduler and the vectorized engine so
+    both aggregate with an identical float-operation order — the oracle
+    parity guarantee covers the roll-up, not just the sessions.
+    """
+    n = len(requests)
+    # Final report per original request = its last attempt (attempts for
+    # one request are appended in order, so a later slot wins).
+    final: dict[int, int] = {}
+    for j in range(len(reqs)):
+        if reports[j] is not None:
+            final[origin[j]] = j
+    done = [reports[final[i]] for i in range(n) if i in final]
+    all_reports = [r for r in reports if r is not None]
+    t_start = min(admit_time[:n])
+    makespan = max(end_clock) - t_start
+    moved_mb = sum(r.moved_mb for r in all_reports)
+    samples = np.array([r.n_samples for r in all_reports], np.float64)
+    if score_vs_single:
+        accs = []
+        for i in range(n):
+            if i not in final:
+                continue
+            opt = single_tenant_optimum(db, testbed, requests[i], admit_time[i])
+            accs.append(
+                100.0 * min(reports[final[i]].steady_mbps, opt) / max(opt, 1e-9)
+            )
+        accuracy = float(np.mean(accs)) if accs else 0.0
+    else:
+        accuracy = float("nan")
+    sessions = [
+        SessionOutcome(
+            request_index=origin[j],
+            attempt=attempt_no[j],
+            tenant_id=j,
+            admit_s=admit_time[j],
+            end_s=end_clock[j],
+            report=reports[j],
+        )
+        for j in range(len(reqs))
+        if reports[j] is not None
+    ]
+    return FleetReport(
+        reports=done,
+        goodput_mbps=moved_mb * 8.0 / max(makespan, 1e-9),
+        makespan_s=makespan,
+        samples_p50=float(np.percentile(samples, 50)),
+        samples_p99=float(np.percentile(samples, 99)),
+        accuracy_vs_single=accuracy,
+        reprobe_grants=reprobe_grants,
+        reprobe_denials=reprobe_denials,
+        admitted_concurrency=admitted_concurrency,
+        refreshes=refreshes,
+        refreshed_entries=refreshed_entries,
+        kills=kills,
+        recoveries=recoveries,
+        sessions=sessions,
+    )
+
+
 class FleetScheduler:
     """Run N concurrent ``AdaptiveSampler`` sessions against one shared link."""
 
@@ -276,35 +435,23 @@ class FleetScheduler:
     # contention-aware admission
     # ------------------------------------------------------------------ #
     def predict_demands(self, requests: list[FleetRequest]) -> np.ndarray:
-        """Predicted per-request demand (Mbit/s) via the batched surface path.
-
-        Requests are grouped by cluster and each cluster's surface stack is
-        scored through ``SurfaceStack.best_candidates`` (vmapped gather or
-        the Pallas kernel).  Demand is a pure function of the cluster — the
-        candidate set is the cluster's own argmax points — so each group is
-        scored once and broadcast to its requests.  The median-load surface's
-        best candidate is what the admission controller budgets against.
-        """
-        link = TESTBEDS[self.config.testbed]
-        demands = np.zeros(len(requests))
-        groups: dict[int, list[int]] = {}
-        for i, req in enumerate(requests):
-            k = self.db.cluster_model.assign(request_features(link, req.dataset))
-            groups.setdefault(int(k), []).append(i)
-        for k, idxs in groups.items():
-            stack = self.db.clusters[k].surface_stack(self.db.bounds)
-            cand = stack.argmax_pts[None, :, :]  # one batch row per cluster
-            best, _ = stack.best_candidates(cand, use_pallas=self.use_pallas)
-            demands[idxs] = float(np.asarray(best)[0, stack.n_surfaces // 2])
-        return demands
+        """Per-request demand via the module-level :func:`predict_demands`."""
+        return predict_demands(
+            self.db,
+            requests,
+            testbed=self.config.testbed,
+            use_pallas=self.use_pallas,
+        )
 
     def _auto_concurrency(self, requests: list[FleetRequest], link) -> int:
-        demands = self.predict_demands(requests)
-        med = float(np.median(demands))
-        if med <= 0.0:
-            return len(requests)
-        cap = int(self.config.overcommit * link.bandwidth_mbps / med)
-        return max(1, min(cap, len(requests)))
+        return auto_concurrency(
+            self.db,
+            requests,
+            link,
+            testbed=self.config.testbed,
+            overcommit=self.config.overcommit,
+            use_pallas=self.use_pallas,
+        )
 
     # ------------------------------------------------------------------ #
     def _make_tenant_env(
@@ -328,30 +475,7 @@ class FleetScheduler:
         )
 
     def _single_tenant_optimum(self, req: FleetRequest, at_clock_s: float) -> float:
-        ds = req.dataset
-        key = (
-            self.config.testbed,
-            req.env_seed,
-            req.constant_load,
-            req.traffic,
-            ds,
-            at_clock_s,
-        )
-        if key not in _OPT_CACHE:
-            if req.traffic is not None:
-                env = Environment(
-                    TESTBEDS[self.config.testbed], req.traffic, seed=req.env_seed
-                )
-            else:
-                env = make_testbed(
-                    self.config.testbed,
-                    seed=req.env_seed,
-                    constant_load=req.constant_load,
-                )
-            env.clock_s = at_clock_s
-            _, opt = env.optimal(self.db.bounds, ds.avg_file_mb, ds.n_files)
-            _OPT_CACHE[key] = opt
-        return _OPT_CACHE[key]
+        return single_tenant_optimum(self.db, self.config.testbed, req, at_clock_s)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: list[FleetRequest]) -> FleetReport:
@@ -537,49 +661,17 @@ class FleetScheduler:
         if errors:
             raise errors[0]
 
-        # Final report per original request = its last attempt (attempts for
-        # one request are appended in order, so a later slot wins).
-        final = {}
-        for j in range(len(reqs)):
-            if reports[j] is not None:
-                final[origin[j]] = j
-        done = [reports[final[i]] for i in range(n) if i in final]
-        all_reports = [r for r in reports if r is not None]
-        t_start = min(admit_time[:n])
-        makespan = max(end_clock) - t_start
-        moved_mb = sum(r.moved_mb for r in all_reports)
-        samples = np.array([r.n_samples for r in all_reports], np.float64)
-        if self.config.score_vs_single:
-            accs = []
-            for i in range(n):
-                if i not in final:
-                    continue
-                opt = self._single_tenant_optimum(requests[i], admit_time[i])
-                accs.append(
-                    100.0 * min(reports[final[i]].steady_mbps, opt) / max(opt, 1e-9)
-                )
-            accuracy = float(np.mean(accs)) if accs else 0.0
-        else:
-            accuracy = float("nan")
-        sessions = [
-            SessionOutcome(
-                request_index=origin[j],
-                attempt=attempt_no[j],
-                tenant_id=j,
-                admit_s=admit_time[j],
-                end_s=end_clock[j],
-                report=reports[j],
-            )
-            for j in range(len(reqs))
-            if reports[j] is not None
-        ]
-        return FleetReport(
-            reports=done,
-            goodput_mbps=moved_mb * 8.0 / max(makespan, 1e-9),
-            makespan_s=makespan,
-            samples_p50=float(np.percentile(samples, 50)),
-            samples_p99=float(np.percentile(samples, 99)),
-            accuracy_vs_single=accuracy,
+        return assemble_fleet_report(
+            self.db,
+            self.config.testbed,
+            requests,
+            reqs=reqs,
+            origin=origin,
+            attempt_no=attempt_no,
+            reports=reports,
+            end_clock=end_clock,
+            admit_time=admit_time,
+            score_vs_single=self.config.score_vs_single,
             reprobe_grants=limiter.grants,
             reprobe_denials=limiter.denials,
             admitted_concurrency=min(cap, n),
@@ -589,5 +681,4 @@ class FleetScheduler:
             ),
             kills=n_kills[0],
             recoveries=n_recoveries[0],
-            sessions=sessions,
         )

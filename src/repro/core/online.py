@@ -153,6 +153,14 @@ def _closest_surface(surfaces: list[ThroughputSurface], prm: TransferParams,
     return min(cand, key=lambda s: abs(s.predict(prm) - achieved))
 
 
+# Session-phase tags carried by ``AdaptiveSampler.session`` yields: what the
+# session is about to do when its driver resumes it.  The vectorized fleet
+# engine mirrors them into its stacked per-session state arrays.
+PHASE_PROBE = 1     # next interaction is a probe transfer (converge loop)
+PHASE_BULK = 2      # next interaction is a bulk chunk transfer
+PHASE_GATE = 3      # next interaction is a re-probe-gate consultation
+
+
 class AdaptiveSampler:
     """The paper's Adaptive Sampling Module (ASM).
 
@@ -161,6 +169,17 @@ class AdaptiveSampler:
     shared rate limiter here so a capacity drop does not trigger a fleet-wide
     re-probe storm.  ``None`` (single-tenant) preserves the original
     behaviour exactly.
+
+    The session logic itself lives in :meth:`session`, a generator that
+    yields ``(clock_s, phase, params)`` immediately before every environment
+    interaction (each probe/bulk ``env.transfer`` and each ``reprobe_gate``
+    consultation) and returns the ``TransferReport``.  :meth:`transfer`
+    drives it to completion in place — the single-tenant path and the
+    threaded fleet (whose ``TenantEnvironment.turn_gate`` serializes each
+    interaction) both go through it — while the vectorized fleet engine
+    interleaves many sessions by resuming whichever generator's yielded
+    clock is the fleet minimum.  One code path, two schedulers: per-session
+    behaviour is identical by construction.
     """
 
     def __init__(self, db: OfflineDB, *, z: float = 2.0, max_samples: int = 3,
@@ -181,12 +200,32 @@ class AdaptiveSampler:
                  budget: int | None = None) -> ThroughputSurface:
         """Probe phase: locate the surface matching current external load.
 
+        Driver around :meth:`_converge` for callers outside a fleet engine;
+        see there for the algorithm.
+        """
+        gen = self._converge(env, dataset, cluster, records, probe_mb, budget)
+        try:
+            while True:
+                next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+    def _converge(self, env: Environment, dataset: Dataset,
+                  cluster: ClusterKnowledge,
+                  records: list[SampleRecord],
+                  probe_mb: float | None = None,
+                  budget: int | None = None):
+        """Probe phase: locate the surface matching current external load.
+
         Sample 1 goes to the most *discriminative* point of the precomputed
         sampling region R_c (Sec. 3.1.4) — the coordinate where the cluster's
         surfaces are maximally separated — which identifies the load level in
         a single probe.  Subsequent samples run the Algorithm-1 loop: probe
         the current surface's argmax, check the Gaussian band, and jump to the
         closest surface on a miss (discarding half the stack each time).
+
+        Generator: yields ``(clock_s, PHASE_PROBE, params)`` before each
+        probe transfer; returns the converged surface.
         """
         surfaces = cluster.sorted_by_load()
         if probe_mb is None:
@@ -201,6 +240,7 @@ class AdaptiveSampler:
         region = cluster.region
         if len(surfaces) > 1 and region.discriminative_points:
             prm = region.discriminative_points[0]
+            yield env.clock_s, PHASE_PROBE, prm
             res = env.transfer(prm, probe_mb, dataset.avg_file_mb,
                                dataset.n_files, is_sample=True)
             achieved = res.steady_mbps
@@ -213,6 +253,7 @@ class AdaptiveSampler:
         # --- Algorithm-1 loop over surface argmaxima ------------------- #
         for _ in range(budget):
             prm = cur.argmax_params
+            yield env.clock_s, PHASE_PROBE, prm
             res = env.transfer(prm, probe_mb, dataset.avg_file_mb,
                                dataset.n_files, is_sample=True)
             achieved = res.steady_mbps     # monitored steady rate, post-ramp
@@ -241,6 +282,21 @@ class AdaptiveSampler:
                  cluster: ClusterKnowledge | None = None) -> TransferReport:
         """Run one full transfer session (probe phase + bulk phase).
 
+        Thin driver over :meth:`session`; see there for the semantics.
+        """
+        gen = self.session(env, dataset, cluster)
+        try:
+            while True:
+                next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+    def session(self, env: Environment, dataset: Dataset,
+                cluster: ClusterKnowledge | None = None):
+        """One full transfer session (probe phase + bulk phase) as a
+        generator yielding ``(clock_s, phase, params)`` immediately before
+        every environment interaction; returns the ``TransferReport``.
+
         ``cluster`` pins the session's knowledge snapshot; ``None`` queries
         the DB here, which is identical as long as the DB is not refreshed
         concurrently.  The fleet scheduler resolves the snapshot at admission
@@ -263,7 +319,8 @@ class AdaptiveSampler:
         interrupted = False
         collapses = 0
         try:
-            surface = self.converge(env, dataset, cluster, records, probe_mb)
+            surface = yield from self._converge(env, dataset, cluster,
+                                                records, probe_mb)
             params = surface.argmax_params
 
             # bulk phase: chunked transfer with drift detection
@@ -282,6 +339,7 @@ class AdaptiveSampler:
             while chunks_left > 0:
                 if chunk_mb <= 0:
                     break
+                yield env.clock_s, PHASE_BULK, params
                 res = env.transfer(params, chunk_mb, dataset.avg_file_mb,
                                    dataset.n_files)
                 chunks_left -= 1
@@ -335,10 +393,11 @@ class AdaptiveSampler:
                         # swing must not trigger N simultaneous re-probe
                         # storms.  Denied sessions fall through to ordinary
                         # strike accounting and retry through the drift path.
-                        if (self.reprobe_gate is not None
-                                and not self.reprobe_gate(env.clock_s)):
-                            strikes += 1
-                            continue
+                        if self.reprobe_gate is not None:
+                            yield env.clock_s, PHASE_GATE, params
+                            if not self.reprobe_gate(env.clock_s):
+                                strikes += 1
+                                continue
                         collapses += 1
                         n_before = len(records)
                         # Probe size scaled to the observed rate ratio: a
@@ -347,7 +406,7 @@ class AdaptiveSampler:
                         re_probe_mb = probe_mb * float(
                             min(max(ratio, 0.05), 1.0))
                         probe_ctx = (n_before, re_probe_mb)
-                        surface = self.converge(
+                        surface = yield from self._converge(
                             env, dataset, cluster, records, re_probe_mb,
                             budget=self.recovery.reprobe_budget)
                         params = surface.argmax_params
@@ -383,9 +442,10 @@ class AdaptiveSampler:
                     # or the clearing surge may move a holding session.
                     strikes += 1
                     if strikes >= 2 and not hold:
-                        if (self.reprobe_gate is not None
-                                and not self.reprobe_gate(env.clock_s)):
-                            continue  # denied: keep strikes, retry next miss
+                        if self.reprobe_gate is not None:
+                            yield env.clock_s, PHASE_GATE, params
+                            if not self.reprobe_gate(env.clock_s):
+                                continue  # denied: keep strikes, retry later
                         surface = _closest_surface(
                             surfaces, params, achieved,
                             lighter=surface.above_band(params, achieved,

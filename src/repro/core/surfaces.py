@@ -34,9 +34,24 @@ class ThroughputSurface:
     max_throughput: float
     local_maxima: list[LocalMax]
     n_obs: int
+    # Memoized point predictions.  Online tuning re-evaluates each surface at
+    # a handful of integer points (argmaxima, discriminative points) tens of
+    # thousands of times across a fleet, and each scalar spline evaluation
+    # costs two tridiagonal solves — this cache is the fleet engines' hottest
+    # win.  Safe because the spline is immutable after fit (refresh swaps in
+    # whole new ThroughputSurface objects) and GIL-atomic dict ops keep the
+    # threaded scheduler race-free; excluded from equality, which still
+    # compares the underlying spline and tags.
+    _predict_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def predict(self, prm: TransferParams) -> float:
-        return float(self.surface(float(prm.p), float(prm.cc), float(prm.pp)))
+        key = (prm.p, prm.cc, prm.pp)
+        v = self._predict_cache.get(key)
+        if v is None:
+            v = float(self.surface(float(prm.p), float(prm.cc), float(prm.pp)))
+            self._predict_cache[key] = v
+        return v
 
     def in_confidence(self, prm: TransferParams, observed: float,
                       z: float = 2.0) -> bool:

@@ -10,7 +10,8 @@ environment through the same narrow ``Environment.transfer()`` API, so none of
 them can cheat.
 """
 from repro.netsim.environment import (
-    Environment, TransferParams, ParamBounds, SharedLink, TenantEnvironment,
+    Environment, IndexedSharedLink, TransferParams, ParamBounds, SharedLink,
+    TenantEnvironment,
 )
 from repro.netsim.testbeds import (
     make_testbed, XSEDE, DIDCLAB, DIDCLAB_XSEDE, TESTBEDS,
@@ -27,7 +28,8 @@ from repro.netsim.loggen import (
 )
 
 __all__ = [
-    "Environment", "TransferParams", "ParamBounds", "SharedLink",
+    "Environment", "IndexedSharedLink", "TransferParams", "ParamBounds",
+    "SharedLink",
     "TenantEnvironment", "make_testbed", "XSEDE", "DIDCLAB", "DIDCLAB_XSEDE",
     "TESTBEDS", "Dataset", "make_dataset", "FILE_CLASSES", "DiurnalTraffic",
     "RegimeShiftTraffic", "StepTraffic", "generate_history", "LogEntry",

@@ -19,6 +19,7 @@ All quantities are Mbit/s and seconds.  The law is deterministic given
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 import threading
 
@@ -372,6 +373,85 @@ class SharedLink:
     def release(self, tenant_id: int) -> None:
         with self._lock:
             self._flows.pop(tenant_id, None)
+
+
+class IndexedSharedLink:
+    """Scalable drop-in for :class:`SharedLink`: O(log N) per operation.
+
+    ``SharedLink.snapshot`` walks every registered flow on every call, which
+    is O(N) per transfer and quadratic fleet-wide — fine for hundreds of
+    tenants, fatal at 1e5+.  This variant keeps running ``sum``/``count``
+    aggregates, expiring dead intervals lazily off a min-heap of
+    ``(end_s, generation, tenant_id)`` records; the generation counter voids
+    stale heap entries when a tenant re-registers before its old interval
+    expired.
+
+    Contract differences vs ``SharedLink``:
+
+    * ``snapshot`` times must be nondecreasing (expiry is monotone).  The
+      vectorized fleet engine guarantees this — it serializes interactions
+      in event order — and the threaded scheduler's conservative clock does
+      too, but arbitrary callers should stick with ``SharedLink``.
+    * The aggregate is an incrementally-maintained float sum, so its
+      rounding differs from ``SharedLink``'s per-snapshot fresh sum: results
+      are numerically equal but not bit-identical.  Engines that need the
+      oracle-parity guarantee use ``SharedLink`` (``contention="auto"``).
+
+    Not thread-safe: built for the single-threaded vectorized engine.
+    """
+
+    def __init__(self, link: LinkSpec):
+        self.link = link
+        self._rate: dict[int, float] = {}
+        self._end: dict[int, float] = {}
+        self._gen: dict[int, int] = {}
+        self._sum = 0.0
+        self._count = 0
+        self._next_gen = 0
+        self._heap: list[tuple[float, int, int]] = []  # (end_s, gen, tid)
+
+    def _expire(self, now_s: float) -> None:
+        while self._heap and self._heap[0][0] <= now_s:
+            end, gen, tid = heapq.heappop(self._heap)
+            if self._gen.get(tid) == gen:
+                self._sum -= self._rate.pop(tid)
+                del self._end[tid]
+                del self._gen[tid]
+                self._count -= 1
+
+    def snapshot(self, now_s: float, exclude: int) -> tuple[float, int]:
+        """(aggregate contending Mbit/s, active flow count) at ``now_s``."""
+        self._expire(now_s)
+        agg, cnt = self._sum, self._count
+        rate = self._rate.get(exclude)
+        if rate is not None:  # post-expiry, every remaining end_s > now_s
+            agg -= rate
+            cnt -= 1
+        return float(agg), cnt
+
+    def register(self, tenant_id: int, rate_mbps: float, end_s: float) -> None:
+        old = self._rate.pop(tenant_id, None)
+        if old is not None:
+            self._sum -= old
+            self._count -= 1
+        # Global monotone generation: never reused even across release(), so
+        # a stale heap entry can never void a later registration.
+        gen = self._next_gen
+        self._next_gen += 1
+        self._rate[tenant_id] = rate_mbps
+        self._end[tenant_id] = end_s
+        self._gen[tenant_id] = gen
+        self._sum += rate_mbps
+        self._count += 1
+        heapq.heappush(self._heap, (end_s, gen, tenant_id))
+
+    def release(self, tenant_id: int) -> None:
+        old = self._rate.pop(tenant_id, None)
+        if old is not None:
+            self._sum -= old
+            self._count -= 1
+            del self._end[tenant_id]
+            del self._gen[tenant_id]
 
 
 class TenantEnvironment(Environment):

@@ -23,16 +23,17 @@ completion-weighted tracking accuracy under every fault class.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 from repro.core import (
-    FleetConfig,
+    EngineConfig,
     FleetReport,
     FleetRequest,
-    FleetScheduler,
     RecoveryConfig,
     RefreshConfig,
     TransferTuner,
     TunerConfig,
+    run_fleet,
 )
 from repro.netsim import (
     CapacityDrop,
@@ -136,20 +137,29 @@ def build_requests(sc: Scenario) -> list[FleetRequest]:
     ]
 
 
-def run_scenario(db, sc: Scenario, *, recovery: bool | None = None
-                 ) -> FleetReport:
-    """Run one scenario against a pre-built DB; ``recovery`` overrides the
-    scenario's own flag (the on-vs-off comparisons use this)."""
+def run_scenario(db, sc: Scenario, *, recovery: bool | None = None,
+                 engine: str = "threaded") -> FleetReport:
+    """Run one scenario against a pre-built DB via the ``run_fleet`` facade.
+
+    ``recovery`` overrides the scenario's own flag (the on-vs-off
+    comparisons use this); ``engine`` selects the scheduler (the
+    threaded-vs-vectorized parity tests run every cell through both)."""
     rec = sc.recovery if recovery is None else recovery
-    config = FleetConfig(
-        testbed=sc.testbed,
-        max_concurrent=sc.fleet_size,
-        faults=build_faults(sc),
-        recovery=RecoveryConfig() if rec else None,
-        refresh=RefreshConfig(every_completions=2, min_entries=4)
-        if sc.refresh else None,
-    )
-    return FleetScheduler(db, config=config).run(build_requests(sc))
+    with warnings.catch_warnings():
+        # Fault-free cells deliberately configure recovery — the matrix's
+        # "recovery must not perturb fault-free fleets" invariant — so the
+        # recovery-without-faults advisory is expected here.
+        warnings.simplefilter("ignore", UserWarning)
+        config = EngineConfig(
+            engine=engine,
+            testbed=sc.testbed,
+            max_concurrent=sc.fleet_size,
+            faults=build_faults(sc),
+            recovery=RecoveryConfig() if rec else None,
+            refresh=RefreshConfig(every_completions=2, min_entries=4)
+            if sc.refresh else None,
+        )
+    return run_fleet(db, build_requests(sc), config)
 
 
 # --------------------------------------------------------------------- #

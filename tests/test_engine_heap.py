@@ -1,0 +1,107 @@
+"""Determinism of the vectorized engine's event heap: pops are globally
+ordered by (time, slot), equal-timestamp ties always break by ascending slot
+id, and neither insertion order nor batch-vs-scalar insertion can change the
+pop sequence."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.engine import VectorEventHeap
+
+
+def drain(h):
+    out = []
+    while len(h):
+        out.append(h.pop())
+    return out
+
+
+def test_pops_match_sorted_reference_on_seeded_stream():
+    rng = np.random.default_rng(7)
+    times = rng.uniform(0.0, 100.0, size=500).round(2)  # rounding forces ties
+    ids = rng.integers(0, 200, size=500)
+    h = VectorEventHeap()
+    for t, i in zip(times, ids):
+        h.push(float(t), int(i))
+    want = sorted(zip(times.tolist(), ids.tolist()))
+    assert drain(h) == want
+
+
+def test_equal_timestamp_ties_pop_by_ascending_slot_id():
+    h = VectorEventHeap()
+    for slot in (9, 3, 7, 1, 5):
+        h.push(42.0, slot)
+    assert drain(h) == [(42.0, 1), (42.0, 3), (42.0, 5), (42.0, 7), (42.0, 9)]
+
+
+def test_insertion_order_cannot_change_pop_order():
+    events = [(1.0, 2), (1.0, 0), (0.5, 9), (1.5, 1), (0.5, 3)]
+    want = sorted(events)
+    for perm in itertools.permutations(events):
+        h = VectorEventHeap()
+        for t, i in perm:
+            h.push(t, i)
+        assert drain(h) == want
+
+
+def test_push_batch_seeding_equals_scalar_pushes():
+    rng = np.random.default_rng(21)
+    times = rng.uniform(0.0, 10.0, size=64).round(1)
+    ids = rng.permutation(64)
+    batched = VectorEventHeap()
+    batched.push_batch(times, ids)
+    scalar = VectorEventHeap()
+    for t, i in zip(times, ids):
+        scalar.push(float(t), int(i))
+    assert drain(batched) == drain(scalar)
+
+
+def test_push_batch_onto_nonempty_heap_keeps_global_order():
+    h = VectorEventHeap()
+    h.push(5.0, 1)
+    h.push(0.5, 2)
+    h.push_batch([3.0, 0.1, 5.0], [7, 8, 0])
+    assert drain(h) == [(0.1, 8), (0.5, 2), (3.0, 7), (5.0, 0), (5.0, 1)]
+
+
+def test_interleaved_push_pop_times_never_go_backwards():
+    rng = np.random.default_rng(3)
+    h = VectorEventHeap()
+    times = []
+    now = 0.0
+    for step in range(200):
+        t = now + float(rng.uniform(0.0, 2.0))
+        h.push(round(t, 1), int(rng.integers(0, 50)))
+        if step % 3 == 2:
+            ev = h.pop()
+            times.append(ev[0])
+            now = ev[0]  # future pushes never precede the last pop
+    times.extend(ev[0] for ev in drain(h))
+    assert times == sorted(times)
+
+
+def test_peek_does_not_consume():
+    h = VectorEventHeap()
+    h.push(2.0, 4)
+    h.push(1.0, 6)
+    assert h.peek() == (1.0, 6)
+    assert len(h) == 2
+    assert h.pop() == (1.0, 6)
+
+
+def test_empty_heap_raises():
+    h = VectorEventHeap()
+    with pytest.raises(IndexError):
+        h.pop()
+    with pytest.raises(IndexError):
+        h.peek()
+
+
+def test_push_batch_rejects_mismatched_shapes():
+    h = VectorEventHeap()
+    with pytest.raises(ValueError):
+        h.push_batch([1.0, 2.0], [1])
+    h.push_batch([], [])  # empty batch is a no-op
+    assert len(h) == 0

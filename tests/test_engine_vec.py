@@ -1,0 +1,201 @@
+"""Vectorized fleet engine vs the threaded oracle: bit-identical
+``FleetReport``s across fleet sizes, fault classes, refresh, and staggered
+admission — plus unit coverage of the engine's state arrays and the
+incremental active-session counter."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    FleetRequest,
+    RecoveryConfig,
+    RefreshConfig,
+    run_fleet,
+)
+from repro.core.engine import VectorizedFleetEngine
+from repro.core.engine.vectorized import (
+    PHASE_IDLE,
+    FleetStateArrays,
+    _ActiveCounter,
+)
+from repro.netsim import FaultSchedule, make_dataset
+from repro.testing import (
+    SCENARIO_MATRIX,
+    build_scenario_db,
+    canonical_trace,
+    run_scenario,
+)
+
+START = 4 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def dbs():
+    return {
+        tb: build_scenario_db(tb)
+        for tb in sorted({sc.testbed for sc in SCENARIO_MATRIX})
+    }
+
+
+def _requests(n, *, stagger=0.0, seed0=99, size="medium"):
+    return [
+        FleetRequest(
+            dataset=make_dataset(size, 7 + i),
+            env_seed=seed0 + i,
+            start_clock_s=START + stagger * i,
+        )
+        for i in range(n)
+    ]
+
+
+def _both(db, reqs, **kw):
+    threaded = run_fleet(db, reqs, EngineConfig(engine="threaded", **kw))
+    vectorized = run_fleet(db, reqs, EngineConfig(engine="vectorized", **kw))
+    return threaded, vectorized
+
+
+# ------------------------------------------------------------------ #
+# parity with the threaded oracle
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize(
+    "name",
+    [
+        "xsede-3-none-constant",
+        "xsede-3-drop-constant",
+        "xsede-3-kill-constant",
+        "xsede-3-churn-constant",
+        "didclab-xsede-3-kill-constant",
+    ],
+)
+def test_matrix_cells_bit_identical_across_engines(dbs, name):
+    sc = next(s for s in SCENARIO_MATRIX if s.name == name)
+    threaded = run_scenario(dbs[sc.testbed], sc, engine="threaded")
+    vectorized = run_scenario(dbs[sc.testbed], sc, engine="vectorized")
+    assert canonical_trace(vectorized) == canonical_trace(threaded)
+    assert vectorized == threaded  # bit-for-bit, not approx
+
+
+@pytest.mark.parametrize("n", [1, 8, 32])
+def test_fault_free_parity_across_fleet_sizes(dbs, n):
+    threaded, vectorized = _both(dbs["xsede"], _requests(n), max_concurrent=min(n, 8))
+    assert vectorized == threaded
+    assert len(vectorized.reports) == n
+
+
+def test_parity_with_auto_concurrency_and_staggered_starts(dbs):
+    # max_concurrent=None exercises the batched-prediction auto cap; the
+    # stagger makes admission times distinct so queue ordering matters.
+    threaded, vectorized = _both(dbs["xsede"], _requests(8, stagger=7.0))
+    assert vectorized == threaded
+
+
+def test_faulted_parity_with_recovery_at_n8(dbs):
+    faults = FaultSchedule.generate(
+        17,
+        start_s=START,
+        horizon_s=90.0,
+        n_flaps=0,
+        n_drops=1,
+        n_bursts=0,
+        n_kills=3,
+        n_tenants=8,
+    )
+    threaded, vectorized = _both(
+        dbs["xsede"],
+        _requests(8),
+        max_concurrent=4,
+        faults=faults,
+        recovery=RecoveryConfig(),
+    )
+    assert vectorized == threaded
+    assert vectorized.recoveries >= 1  # the fault actually bit
+
+
+def test_refresh_parity_uses_fresh_dbs_per_engine():
+    # The refresher mutates the DB in place, so each engine gets its own
+    # identically-built copy; parity then covers the refresh path too.
+    reqs = _requests(8)
+    kw = dict(
+        max_concurrent=4,
+        refresh=RefreshConfig(every_completions=2, min_entries=4),
+    )
+    threaded = run_fleet(
+        build_scenario_db("xsede"), reqs, EngineConfig(engine="threaded", **kw)
+    )
+    vectorized = run_fleet(
+        build_scenario_db("xsede"),
+        reqs,
+        EngineConfig(engine="vectorized", **kw),
+    )
+    assert vectorized == threaded
+    assert vectorized.refreshes >= 1
+
+
+def test_indexed_contention_close_to_exact(dbs):
+    reqs = _requests(8)
+    kw = dict(max_concurrent=8, score_vs_single=False)
+    exact = run_fleet(
+        dbs["xsede"],
+        reqs,
+        EngineConfig(engine="vectorized", contention="exact", **kw),
+    )
+    indexed = run_fleet(
+        dbs["xsede"],
+        reqs,
+        EngineConfig(engine="vectorized", contention="indexed", **kw),
+    )
+    # Different float-summation order, same physics: per-session goodput
+    # must agree tightly even though traces need not be bit-identical.
+    for a, b in zip(exact.reports, indexed.reports):
+        assert b.achieved_mbps == pytest.approx(a.achieved_mbps, rel=1e-6)
+    assert indexed.goodput_mbps == pytest.approx(exact.goodput_mbps, rel=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# engine internals
+# ------------------------------------------------------------------ #
+def test_engine_state_retires_every_slot(dbs):
+    engine = VectorizedFleetEngine(
+        dbs["xsede"], EngineConfig(engine="vectorized", max_concurrent=2)
+    )
+    fleet = engine.run(_requests(4))
+    assert len(fleet.reports) == 4
+    assert engine.events_processed > 0
+    hist = engine.state.live_histogram(4)
+    assert hist == {PHASE_IDLE: 4}  # every slot retired back to idle
+
+
+def test_state_arrays_grow_preserving_contents():
+    st = FleetStateArrays.allocate(2)
+    st.phase[1] = 3
+    st.params[1] = (4, 8, 2)
+    st.next_event_s[1] = 123.5
+    st.grow_to(9)
+    assert st.phase.shape[0] >= 9
+    assert st.params.shape == (st.phase.shape[0], 3)
+    assert st.phase[1] == 3
+    assert tuple(st.params[1]) == (4, 8, 2)
+    assert st.next_event_s[1] == 123.5
+    assert np.all(np.isinf(st.next_event_s[2:]))  # new rows start inert
+    before = st.phase.shape[0]
+    st.grow_to(4)  # never shrinks
+    assert st.phase.shape[0] == before
+
+
+def test_active_counter_matches_brute_force():
+    rng = np.random.default_rng(5)
+    admits = np.sort(rng.uniform(0.0, 50.0, size=40))
+    counter = _ActiveCounter()
+    for t in admits:
+        counter.admit(float(t))
+    n_finished = 0
+    # queries arrive in event order (monotone time), like the engine loop
+    for step, now in enumerate(np.linspace(0.0, 80.0, 161)):
+        want = int(np.sum(admits <= now)) - n_finished
+        assert counter(float(now)) == want
+        if step % 5 == 4 and want > 0:  # retire one active session
+            counter.finish(float(now))
+            n_finished += 1
+    assert n_finished > 0
+    assert counter(100.0) == len(admits) - n_finished

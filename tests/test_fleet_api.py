@@ -1,0 +1,136 @@
+"""The unified fleet API: EngineConfig validation, the run_fleet facade, and
+the deprecation shims that keep legacy FleetConfig call sites working."""
+
+import warnings
+
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    FleetConfig,
+    FleetRequest,
+    FleetScheduler,
+    RecoveryConfig,
+    TransferTuner,
+    TunerConfig,
+    run_fleet,
+)
+from repro.netsim import (
+    FaultSchedule,
+    LinkFlap,
+    generate_history,
+    make_dataset,
+    make_testbed,
+)
+
+START = 4 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def db():
+    env = make_testbed("xsede", seed=3)
+    hist = generate_history(env, days=4, transfers_per_day=120, seed=0)
+    return TransferTuner(TunerConfig(seed=0)).fit(hist).db
+
+
+def _requests(n):
+    return [
+        FleetRequest(
+            dataset=make_dataset("medium", 7 + i),
+            env_seed=99 + i,
+            start_clock_s=START,
+        )
+        for i in range(n)
+    ]
+
+
+# ------------------------------------------------------------------ #
+# validation
+# ------------------------------------------------------------------ #
+def test_unknown_engine_rejected_listing_valid_engines():
+    with pytest.raises(ValueError, match="threaded.*vectorized"):
+        EngineConfig(engine="warp-drive")
+
+
+def test_nonpositive_max_concurrent_rejected():
+    with pytest.raises(ValueError, match="max_concurrent"):
+        EngineConfig(max_concurrent=0)
+    with pytest.raises(ValueError, match="max_concurrent"):
+        EngineConfig(max_concurrent=-3)
+    EngineConfig(max_concurrent=None)  # auto stays valid
+    EngineConfig(max_concurrent=4)
+
+
+def test_unknown_contention_mode_rejected():
+    with pytest.raises(ValueError, match="auto.*exact.*indexed"):
+        EngineConfig(contention="approximate")
+
+
+def test_recovery_without_faults_warns():
+    with pytest.warns(UserWarning, match="recovery.*faults"):
+        EngineConfig(recovery=RecoveryConfig())
+
+
+def test_recovery_with_faults_does_not_warn():
+    faults = FaultSchedule((LinkFlap(START + 10.0, 30.0),))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        EngineConfig(recovery=RecoveryConfig(), faults=faults)
+        EngineConfig()  # neither set is fine too
+
+
+# ------------------------------------------------------------------ #
+# facade + shims
+# ------------------------------------------------------------------ #
+def test_run_fleet_default_matches_fleet_scheduler(db):
+    reqs = _requests(2)
+    want = FleetScheduler(db, config=FleetConfig(max_concurrent=2)).run(reqs)
+    got = run_fleet(db, reqs, EngineConfig(max_concurrent=2))
+    assert got == want  # bit-for-bit, not approx
+
+
+def test_run_fleet_accepts_legacy_fleet_config_with_deprecation(db):
+    reqs = _requests(2)
+    legacy = FleetConfig(max_concurrent=2)
+    with pytest.warns(DeprecationWarning, match="FleetConfig.*deprecated"):
+        got = run_fleet(db, reqs, legacy)
+    want = run_fleet(db, reqs, EngineConfig(max_concurrent=2))
+    assert got == want
+
+
+def test_run_fleet_rejects_foreign_config_types(db):
+    with pytest.raises(TypeError, match="EngineConfig"):
+        run_fleet(db, _requests(1), config={"max_concurrent": 2})
+
+
+def test_fleet_config_round_trip_preserves_fleet_knobs():
+    faults = FaultSchedule((LinkFlap(START + 10.0, 30.0),))
+    legacy = FleetConfig(
+        testbed="didclab",
+        max_concurrent=5,
+        overcommit=1.5,
+        reprobe_interval_s=9.0,
+        score_vs_single=False,
+        faults=faults,
+        recovery=RecoveryConfig(),
+    )
+    ec = EngineConfig.from_fleet_config(legacy, engine="vectorized", z=1.5)
+    assert ec.engine == "vectorized"
+    assert ec.z == 1.5
+    back = ec.to_fleet_config()
+    assert back == legacy
+
+
+def test_from_fleet_config_suppresses_legacy_recovery_warning():
+    legacy = FleetConfig(recovery=RecoveryConfig())  # no faults: legacy no-op
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        EngineConfig.from_fleet_config(legacy)
+
+
+def test_run_fleet_engine_selector_reaches_vectorized(db):
+    reqs = _requests(1)
+    got = run_fleet(db, reqs, EngineConfig(engine="vectorized", max_concurrent=1))
+    want = run_fleet(db, reqs, EngineConfig(engine="threaded", max_concurrent=1))
+    assert got == want
+    assert len(got.reports) == 1
