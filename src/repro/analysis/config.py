@@ -51,11 +51,35 @@ class KernelContractConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ParityConfig:
+    """Layout of the dual-engine parity contract (PAR* rules): the
+    canonical module holding the shared aggregation functions, the engine
+    modules required to route through them, and the prefix under which
+    drift copies are hunted."""
+
+    canonical_module: str = "src/repro/core/fleet.py"
+    engine_modules: tuple[str, ...] = (
+        "src/repro/core/fleet.py",
+        "src/repro/core/engine/vectorized.py",
+    )
+    shared_functions: tuple[str, ...] = (
+        "predict_demands",
+        "auto_concurrency",
+        "single_tenant_optimum",
+        "assemble_fleet_report",
+    )
+    #: The funnel every engine's run path must actually call.
+    required_calls: tuple[str, ...] = ("assemble_fleet_report",)
+    watch_prefix: str = "src/"
+
+
+@dataclasses.dataclass(frozen=True)
 class AnalysisConfig:
     scopes: dict = dataclasses.field(default_factory=dict)
     kernel_contract: KernelContractConfig = dataclasses.field(
         default_factory=KernelContractConfig
     )
+    parity: ParityConfig = dataclasses.field(default_factory=ParityConfig)
 
     def scope_for(self, family: str) -> Scope:
         return self.scopes.get(family, Scope(include=("",)))  # default: all
@@ -89,10 +113,14 @@ def default_config() -> AnalysisConfig:
             "determinism": Scope(include=SIM_PATH),
             "locks": Scope(include=("src/",)),
             "tracing": Scope(include=TRACED_PATH),
+            # the suffix convention is load-bearing where the transfer math
+            # lives; CLI/launch glue may name things loosely
+            "units": Scope(include=("src/repro/core/", "src/repro/netsim/")),
             # meta rules (suppression hygiene) apply wherever suppressions do
             "meta": Scope(include=("src/", "tests/", "benchmarks/")),
         },
         kernel_contract=KernelContractConfig(),
+        parity=ParityConfig(),
     )
 
 

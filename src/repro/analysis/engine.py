@@ -23,6 +23,17 @@ class Corpus:
     root: Path
     modules: dict[str, ModuleInfo]  # rel posix path -> parsed module
     config: AnalysisConfig
+    cache_data: dict | None = None  # prior dataflow facts (content-addressed)
+    _dataflow: object = dataclasses.field(default=None, repr=False)
+
+    def dataflow(self):
+        """The corpus call graph + effect summaries, built lazily and
+        memoized so every interprocedural rule shares one fixpoint."""
+        if self._dataflow is None:
+            from repro.analysis.dataflow import build_dataflow
+
+            self._dataflow = build_dataflow(self, cache=self.cache_data)
+        return self._dataflow
 
     def module(self, rel: str) -> ModuleInfo | None:
         """The parsed module at ``rel``, loading it from the root if the
@@ -96,6 +107,8 @@ def run_analysis(
     root: Path | str | None = None,
     config: AnalysisConfig | None = None,
     rule_ids: set[str] | None = None,
+    report_rels: set[str] | None = None,
+    cache_path: Path | str | None = None,
 ) -> AnalysisResult:
     """Run every registered rule over ``paths``.
 
@@ -103,6 +116,15 @@ def run_analysis(
     corpus use; it defaults to the current directory, which is the repo root
     for CI and tier-1 invocations.  ``rule_ids`` restricts the run to a
     subset of rules (CLI ``--rules``).
+
+    ``report_rels`` filters the *report*, not the analysis: the whole
+    corpus is still parsed and propagated (interprocedural findings need
+    cross-file context), but only violations anchored in the given rel
+    paths are returned — the ``--changed`` fast path.
+
+    ``cache_path`` round-trips the per-file dataflow facts (JSON,
+    content-addressed by source sha256) so repeat runs and sibling CI jobs
+    skip local fact extraction for unchanged files.
     """
     root = Path(root) if root is not None else Path.cwd()
     config = config or default_config()
@@ -122,7 +144,13 @@ def run_analysis(
             continue
         modules[mod.rel] = mod
 
-    corpus = Corpus(root=root, modules=dict(modules), config=config)
+    cache_data = None
+    if cache_path is not None:
+        from repro.analysis.dataflow import load_cache
+
+        cache_data = load_cache(Path(cache_path))
+    corpus = Corpus(root=root, modules=dict(modules), config=config,
+                    cache_data=cache_data)
     for rule in rules:
         scope = config.scope_for(rule.family)
         if rule.scope == "corpus":
@@ -145,6 +173,15 @@ def run_analysis(
             live, quiet = _apply_suppressions(modules[rel], rule.check(modules[rel]))
             violations.extend(live)
             suppressed.extend(quiet)
+
+    if cache_path is not None:
+        from repro.analysis.dataflow import save_cache
+
+        save_cache(Path(cache_path), corpus.dataflow())
+
+    if report_rels is not None:
+        violations = [v for v in violations if v.path in report_rels]
+        suppressed = [v for v in suppressed if v.path in report_rels]
 
     key = lambda v: (v.path, v.line, v.col, v.rule)  # noqa: E731
     violations.sort(key=key)

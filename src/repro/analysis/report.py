@@ -1,10 +1,14 @@
-"""Human-readable and JSON reporters over an :class:`AnalysisResult`."""
+"""Human-readable, JSON, and SARIF reporters over an
+:class:`AnalysisResult`."""
 
 from __future__ import annotations
 
 import json
 
 from repro.analysis.engine import AnalysisResult
+
+_SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                 "master/Schemata/sarif-schema-2.1.0.json")
 
 
 def human_report(result: AnalysisResult, *, verbose: bool = False) -> str:
@@ -25,3 +29,53 @@ def human_report(result: AnalysisResult, *, verbose: bool = False) -> str:
 
 def json_report(result: AnalysisResult) -> str:
     return json.dumps(result.to_json(), indent=2, sort_keys=True)
+
+
+def sarif_report(result: AnalysisResult) -> str:
+    """SARIF 2.1.0 — what GitHub code scanning ingests to annotate PR
+    diffs.  Suppressed findings are included with an ``inSource``
+    suppression record so they show as dismissed, not absent."""
+    from repro.analysis.base import all_rules
+
+    rules_meta = [
+        {
+            "id": r.rule_id,
+            "shortDescription": {"text": r.summary},
+            "properties": {"family": r.family},
+        }
+        for r in all_rules()
+    ]
+    results = []
+    for v in result.violations + result.suppressed:
+        item = {
+            "ruleId": v.rule,
+            "level": "note" if v.suppressed else "error",
+            "message": {"text": v.message},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": v.path},
+                    "region": {
+                        "startLine": max(v.line, 1),
+                        "startColumn": v.col + 1,
+                    },
+                },
+            }],
+        }
+        if v.suppressed:
+            item["suppressions"] = [{
+                "kind": "inSource",
+                "justification": v.suppress_reason or "",
+            }]
+        results.append(item)
+    sarif = {
+        "$schema": _SARIF_SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro-analysis",
+                "rules": rules_meta,
+            }},
+            "results": results,
+        }],
+    }
+    return json.dumps(sarif, indent=2, sort_keys=True)

@@ -2,8 +2,11 @@
 
 from repro.analysis.rules import (  # noqa: F401
     determinism,
+    interprocedural,
     kernel_contract,
     locks,
     meta,
+    parity,
     tracing,
+    units,
 )

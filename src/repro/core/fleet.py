@@ -114,7 +114,7 @@ class FleetReport:
     refreshes: int = 0  # continuous-refresh rounds run during the fleet
     refreshed_entries: int = 0  # log entries folded back into the OfflineDB
     kills: int = 0  # sessions interrupted by fault injection
-    recoveries: int = 0  # killed sessions re-admitted with residual bytes
+    recoveries: int = 0  # killed sessions re-admitted with residual MB
     sessions: list[SessionOutcome] = dataclasses.field(default_factory=list)
 
     def attempts_for(self, request_index: int) -> list[SessionOutcome]:
@@ -307,7 +307,11 @@ def single_tenant_optimum(
     """Steady rate of the grid-search optimum a lone tenant would achieve on
     a fresh testbed at ``at_clock_s`` (memoized in ``_OPT_CACHE``)."""
     ds = req.dataset
+    # db.bounds must key the memo: the optimum is a grid search over the
+    # db's parameter domain, and the DET103 taint audit showed two
+    # differently-bounded DBs in one process would otherwise share entries.
     key = (
+        db.bounds,
         testbed,
         req.env_seed,
         req.constant_load,

@@ -76,7 +76,7 @@ class SessionCheckpoint:
     """Progress checkpoint of an interrupted session (arXiv:1812.11255's
     transfer-state checkpointing, reduced to what re-admission needs)."""
 
-    moved_mb: float                 # bytes delivered before the interruption
+    moved_mb: float                 # MB delivered before the interruption
     params: tuple[int, int, int]    # last live parameter tuple
     clock_s: float                  # simulated time of the interruption
 
@@ -310,9 +310,9 @@ class AdaptiveSampler:
         t0 = env.clock_s
         probe_mb = dataset.sample_chunks(self.bulk_chunks + self.max_samples)[0]
         params: TransferParams | None = None
-        bulk_moved_mb = 0.0   # bulk bytes delivered (kill/collapse bookkeeping)
-        partial_mb = 0.0      # bytes a killed chunk moved before dying
-        sampled_mb = 0.0      # probe bytes delivered
+        bulk_moved_mb = 0.0   # bulk MB delivered (kill/collapse bookkeeping)
+        partial_mb = 0.0      # MB a killed chunk moved before dying
+        sampled_mb = 0.0      # probe MB delivered
         # (records-at-start, probe size) of the converge call in flight, so a
         # kill mid-probe-phase still yields byte-exact progress accounting
         probe_ctx: tuple[int, float] | None = (0, probe_mb)

@@ -49,8 +49,8 @@ class TransferResult:
 
     ``steady_mbps`` is the rate a monitoring loop would report once past the
     setup/slow-start ramp — this is what tuners compare against model
-    predictions.  ``effective_mbps`` divides bytes by total elapsed time
-    including setup, i.e. what the end user experiences.
+    predictions.  ``effective_mbps`` divides megabits moved by total elapsed
+    time including setup, i.e. what the end user experiences.
     """
     effective_mbps: float
     steady_mbps: float
@@ -279,7 +279,7 @@ class Environment:
         inside the chunk truncates it at the kill instant: the flow interval
         is registered only up to that instant (a full-chunk interval would
         leave phantom contention on the shared link after the session died)
-        and ``SessionKilled`` carries the bytes the chunk actually moved.
+        and ``SessionKilled`` carries the MB the chunk actually moved.
         """
         from repro.netsim.faults import SessionKilled
 

@@ -20,10 +20,10 @@ class Dataset:
     file_class: str
     avg_file_mb: float
     n_files: int
-    # Residual bytes of a recovered (killed / interrupted) session.  File-mix
+    # Residual MB of a recovered (killed / interrupted) session.  File-mix
     # characteristics stay those of the original dataset — the files are the
-    # same, only fewer remain — while total_mb reflects exactly the bytes
-    # still owed, so recovery bookkeeping is byte-exact rather than rounded
+    # same, only fewer remain — while total_mb reflects exactly the MB
+    # still owed, so recovery bookkeeping is MB-exact rather than rounded
     # to whole files.
     resume_mb: float | None = None
 

@@ -3,6 +3,7 @@ suppressed), the seeded real-bug patterns from PRs 2/3/5, suppression
 semantics, CLI behaviour, and the tier-1 self-scan of ``src/``."""
 
 import json
+import os
 import textwrap
 from pathlib import Path
 
@@ -440,7 +441,9 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for rid in ("DET001", "DET002", "DET003", "DET004", "LOCK001", "LOCK002",
                 "KER001", "KER002", "KER003", "TRACE001", "TRACE002",
-                "SUP001"):
+                "SUP001", "DET101", "DET102", "DET103", "DET104",
+                "UNIT001", "UNIT002", "UNIT003",
+                "PAR001", "PAR002", "PAR003"):
         assert rid in out
 
 
@@ -513,9 +516,13 @@ def test_syntax_error_is_reported_not_raised(tmp_path):
 # ====================== tier-1 self-scan of src/ ======================= #
 def test_self_scan_src_is_clean():
     """The analyzer's own acceptance bar: ``python -m repro.analysis src``
-    exits 0 on the tree it ships in."""
+    exits 0 on the tree it ships in — with every family (local determinism,
+    interprocedural taint, units, parity, locks, kernel contracts, tracing)
+    enabled.  CI shares its dataflow-facts cache with this test via
+    REPRO_ANALYSIS_CACHE so the self-scan skips re-extraction there."""
+    cache = os.environ.get("REPRO_ANALYSIS_CACHE")
     res = run_analysis([REPO_ROOT / "src"], root=REPO_ROOT,
-                       config=default_config())
+                       config=default_config(), cache_path=cache)
     assert res.ok, "\n".join(v.format() for v in res.violations)
     assert res.files_scanned > 50
     # every suppression in the tree documents why it is safe

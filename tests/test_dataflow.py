@@ -1,0 +1,681 @@
+"""Interprocedural dataflow layer: call-graph construction (aliases,
+cycles, method resolution), effect-summary fixpoint convergence, the
+DET101-104 boundary rules, the UNIT and PAR families, and the CLI plumbing
+that rides on the same machinery (--changed, --format sarif, --cache).
+
+The centerpiece regression: a ``time.time()`` hidden behind a two-deep
+helper chain called from a sim-path module is flagged by the
+interprocedural pass and provably NOT flagged by the PR 6 local rules —
+both assertions encoded in one test.
+"""
+
+import json
+import subprocess
+import textwrap
+from pathlib import Path
+
+from repro.analysis import default_config, permissive_config, run_analysis
+from repro.analysis.astutil import parse_module
+from repro.analysis.cli import main as cli_main
+from repro.analysis.config import AnalysisConfig, ParityConfig
+from repro.analysis.dataflow import (
+    GLOBAL_MUT,
+    SET_ORDER,
+    UNSEEDED_RNG,
+    WALL_CLOCK,
+    build_dataflow,
+    module_name,
+)
+from repro.analysis.engine import Corpus, discover
+
+LOCAL_DET = {"DET001", "DET002", "DET003", "DET004"}
+
+
+def write_files(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+
+
+def scan(tmp_path, files, *, rules=None, config=None):
+    write_files(tmp_path, files)
+    return run_analysis([tmp_path], root=tmp_path,
+                        config=config or default_config(), rule_ids=rules)
+
+
+def corpus_of(tmp_path, files):
+    write_files(tmp_path, files)
+    modules = {}
+    for p in discover([tmp_path]):
+        mod = parse_module(p, tmp_path)
+        modules[mod.rel] = mod
+    return Corpus(root=tmp_path, modules=modules, config=default_config())
+
+
+def fired(result):
+    return [v.rule for v in result.violations]
+
+
+# ===================== call-graph construction ========================= #
+def test_module_name_mapping():
+    assert module_name("src/repro/core/fleet.py") == "repro.core.fleet"
+    assert module_name("src/repro/core/__init__.py") == "repro.core"
+    assert module_name("pkg/a.py") == "pkg.a"
+
+
+def test_callgraph_resolves_aliased_imports(tmp_path):
+    df = build_dataflow(corpus_of(tmp_path, {
+        "util/helpers.py": """
+            def tick():
+                return 1
+        """,
+        "app/main.py": """
+            import util.helpers as uh
+            from util.helpers import tick as t
+
+            def go():
+                return uh.tick() + t()
+        """,
+    }))
+    callees = {cs.callee for cs in df.functions["app.main.go"].calls}
+    assert callees == {"util.helpers.tick"}
+
+
+def test_callgraph_method_resolution_through_bases(tmp_path):
+    df = build_dataflow(corpus_of(tmp_path, {
+        "pkg/base.py": """
+            import time
+
+            class Timer:
+                def read(self):
+                    return time.time()
+        """,
+        "pkg/eng.py": """
+            from pkg.base import Timer
+
+            class Engine(Timer):
+                def step(self):
+                    return self.read()
+        """,
+    }))
+    callees = {cs.callee for cs in df.functions["pkg.eng.Engine.step"].calls}
+    assert callees == {"pkg.base.Timer.read"}
+    # and the effect propagates through the inherited method
+    taint = df.taint("pkg.eng.Engine.step", WALL_CLOCK)
+    assert taint is not None
+    assert taint.chain == ("pkg.eng.Engine.step", "pkg.base.Timer.read")
+
+
+def test_callgraph_constructor_edges(tmp_path):
+    df = build_dataflow(corpus_of(tmp_path, {
+        "pkg/mod.py": """
+            import time
+
+            class Sampler:
+                def __init__(self):
+                    self.t0 = time.time()
+
+            def make():
+                return Sampler()
+        """,
+    }))
+    callees = {cs.callee for cs in df.functions["pkg.mod.make"].calls}
+    assert callees == {"pkg.mod.Sampler.__init__"}
+    assert df.taint("pkg.mod.make", WALL_CLOCK) is not None
+
+
+def test_fixpoint_converges_on_cycles(tmp_path):
+    df = build_dataflow(corpus_of(tmp_path, {
+        "pkg/cyc.py": """
+            import time
+
+            def ping(n):
+                return pong(n)
+
+            def pong(n):
+                if n:
+                    return ping(n - 1)
+                return time.time()
+        """,
+    }))
+    # terminates, and both members of the cycle carry the effect with the
+    # shortest witness chain to the origin
+    assert df.taint("pkg.cyc.pong", WALL_CLOCK).chain == ("pkg.cyc.pong",)
+    assert df.taint("pkg.cyc.ping", WALL_CLOCK).chain == (
+        "pkg.cyc.ping", "pkg.cyc.pong")
+    assert df.taint("pkg.cyc.ping", WALL_CLOCK).detail == "time.time()"
+
+
+def test_effect_summaries_cover_all_four_effects(tmp_path):
+    df = build_dataflow(corpus_of(tmp_path, {
+        "pkg/effects.py": """
+            import time
+            import numpy as np
+
+            _MEMO: dict = {}
+
+            def wall():
+                return time.time()
+
+            def rng():
+                return np.random.normal()
+
+            def mut(k, v):
+                _MEMO[k] = v
+
+            def order(items):
+                s = set(items)
+                out = []
+                for x in s:
+                    out.append(x)
+                return out
+        """,
+    }))
+    assert df.taint("pkg.effects.wall", WALL_CLOCK)
+    assert df.taint("pkg.effects.rng", UNSEEDED_RNG)
+    assert df.taint("pkg.effects.mut", GLOBAL_MUT)
+    assert df.taint("pkg.effects.order", SET_ORDER)
+
+
+# ================ DET101-104: taint boundary rules ===================== #
+TWO_DEEP = {
+    "src/repro/core/sched.py": """
+        from repro.util.clockwrap import stamp
+
+        def admit(now_s):
+            return now_s + stamp()
+    """,
+    "src/repro/util/clockwrap.py": """
+        import time
+
+        def stamp():
+            return _now()
+
+        def _now():
+            return time.time()
+    """,
+}
+
+
+def test_two_deep_wall_clock_regression(tmp_path):
+    """The acceptance fixture: time.time() two helpers deep, called from a
+    sim-path module.  The interprocedural pass flags the boundary call
+    site; the PR 6 local rules, run alone, provably miss it."""
+    res = scan(tmp_path, TWO_DEEP)
+    assert fired(res) == ["DET101"]
+    v = res.violations[0]
+    assert v.path == "src/repro/core/sched.py"
+    assert v.line == 5
+    assert "time.time" in v.message
+    assert "stamp -> _now" in v.message  # the witness chain
+    assert "src/repro/util/clockwrap.py:8" in v.message
+
+    local_only = scan(tmp_path, TWO_DEEP, rules=LOCAL_DET)
+    assert local_only.ok  # DET001-004 alone cannot see through the chain
+
+
+def test_boundary_flags_once_not_per_frame(tmp_path):
+    """Taint originating *inside* the sim path is the local rules' finding;
+    DET101 must not double-report it at every sim-internal call site."""
+    res = scan(tmp_path, {"src/repro/core/direct.py": """
+        import time
+
+        def t():
+            return time.time()
+
+        def u():
+            return t()
+    """})
+    assert fired(res) == ["DET001"]
+
+
+def test_det102_rng_taint_through_helper(tmp_path):
+    res = scan(tmp_path, {
+        "src/repro/core/refit.py": """
+            from repro.util.rngutil import jitter
+
+            def refit(surface):
+                return surface + jitter()
+        """,
+        "src/repro/util/rngutil.py": """
+            import numpy as np
+
+            def jitter():
+                return np.random.normal()
+        """,
+    })
+    assert fired(res) == ["DET102"]
+    assert "numpy.random.normal" in res.violations[0].message
+
+
+def test_det103_global_mutation_taint(tmp_path):
+    res = scan(tmp_path, {
+        "src/repro/core/lookup.py": """
+            from repro.util.memo import put
+
+            def lookup(k, v):
+                put(k, v)
+                return v
+        """,
+        "src/repro/util/memo.py": """
+            _TABLE: dict = {}
+
+            def put(k, v):
+                _TABLE[k] = v
+        """,
+    })
+    assert fired(res) == ["DET103"]
+    assert "_TABLE" in res.violations[0].message
+
+
+def test_det104_set_order_taint(tmp_path):
+    res = scan(tmp_path, {
+        "src/repro/core/pick.py": """
+            from repro.util.setutil import first
+
+            def pick(items):
+                return first(items)
+        """,
+        "src/repro/util/setutil.py": """
+            def first(items):
+                s = set(items)
+                out = []
+                for x in s:
+                    out.append(x)
+                return out
+        """,
+    })
+    assert fired(res) == ["DET104"]
+
+
+def test_suppressed_origin_does_not_taint(tmp_path):
+    """A reasoned suppression at the effect's origin (the offline.py
+    fit_seconds pattern) removes it from every summary — callers stay
+    clean instead of needing their own suppressions."""
+    files = dict(TWO_DEEP)
+    files["src/repro/util/clockwrap.py"] = """
+        import time
+
+        def stamp():
+            return _now()
+
+        def _now():
+            return time.time()  # repro-lint: disable=DET101 -- observability metadata, never fed to traces
+    """
+    res = scan(tmp_path, files)
+    assert res.ok
+
+
+def test_boundary_call_site_suppressible(tmp_path):
+    files = dict(TWO_DEEP)
+    files["src/repro/core/sched.py"] = """
+        from repro.util.clockwrap import stamp
+
+        def admit(now_s):
+            return now_s + stamp()  # repro-lint: disable=DET101 -- logged only, not simulated
+    """
+    res = scan(tmp_path, files)
+    assert res.ok
+    assert [v.rule for v in res.suppressed] == ["DET101"]
+
+
+# ===================== UNIT001-003: units of measure =================== #
+def test_unit001_incompatible_addition(tmp_path):
+    res = scan(tmp_path, {"src/repro/core/u.py": """
+        def slack(dur_s, rate_mbps):
+            return dur_s + rate_mbps
+    """})
+    assert fired(res) == ["UNIT001"]
+    assert "`s` and `mbps`" in res.violations[0].message
+
+
+def test_unit003_mb_over_mbps_goodput_bug(tmp_path):
+    """The seeded repo pattern: MB divided by Mbps without * 8 — the
+    result lands in a _s name 8x off."""
+    res = scan(tmp_path, {"src/repro/netsim/g.py": """
+        def xfer(size_mb, rate_mbps):
+            wait_s = size_mb / rate_mbps
+            return wait_s
+    """})
+    assert fired(res) == ["UNIT003"]
+    assert "bits factor" in res.violations[0].message
+
+
+def test_unit002_rate_binding_missing_factor(tmp_path):
+    res = scan(tmp_path, {"src/repro/core/u.py": """
+        def goodput(moved_mb, makespan_s):
+            rate_mbps = moved_mb / makespan_s
+            return rate_mbps
+    """})
+    assert fired(res) == ["UNIT002"]
+    assert "* 8.0" in res.violations[0].message
+
+
+def test_unit002_return_against_function_suffix(tmp_path):
+    res = scan(tmp_path, {"src/repro/core/u.py": """
+        def window_s(cap_mb):
+            return cap_mb
+    """})
+    assert fired(res) == ["UNIT002"]
+
+
+def test_unit002_keyword_argument_binding(tmp_path):
+    res = scan(tmp_path, {"src/repro/netsim/u.py": """
+        def build(configure, delay_s):
+            return configure(bandwidth_mbps=delay_s)
+    """})
+    assert fired(res) == ["UNIT002"]
+
+
+def test_unit_clean_on_repo_idioms(tmp_path):
+    """The conversions the transfer math actually uses must all pass."""
+    res = scan(tmp_path, {"src/repro/netsim/ok.py": """
+        def conversions(moved_mb, elapsed_s, bandwidth_mbps, rtt_s,
+                        avg_file_mb, tcp_buffer_mb):
+            goodput_mbps = moved_mb * 8.0 / elapsed_s
+            bdp_mb = bandwidth_mbps * rtt_s / 8.0
+            xfer_s = (avg_file_mb * 8.0) / bandwidth_mbps
+            window_mbps = (tcp_buffer_mb * 8.0) / max(rtt_s, 1e-6)
+            remaining_mbit = moved_mb * 8.0
+            halved_s = rtt_s / 2.0
+            return (goodput_mbps, bdp_mb, xfer_s, window_mbps,
+                    remaining_mbit, halved_s)
+    """})
+    assert res.ok, "\n".join(v.format() for v in res.violations)
+
+
+def test_unit_unknowns_never_fire(tmp_path):
+    """Conservatism: a plain name has no unit, so nothing can be proven."""
+    res = scan(tmp_path, {"src/repro/core/u.py": """
+        def mixed(rate, dur_s, size_mb):
+            a = rate + dur_s
+            b = size_mb / rate
+            return a + b
+    """})
+    assert res.ok
+
+
+def test_unit_suppression(tmp_path):
+    res = scan(tmp_path, {"src/repro/core/u.py": """
+        def odd(dur_s, rate_mbps):
+            return dur_s + rate_mbps  # repro-lint: disable=UNIT001 -- fixture: deliberate apples-to-oranges score
+    """})
+    assert res.ok
+    assert [v.rule for v in res.suppressed] == ["UNIT001"]
+
+
+def test_unit_scope_excludes_launch_glue(tmp_path):
+    res = scan(tmp_path, {"src/repro/launch/glue.py": """
+        def report(dur_s, rate_mbps):
+            return dur_s + rate_mbps
+    """})
+    assert res.ok
+
+
+# ===================== PAR001-003: engine parity ======================= #
+def parity_cfg():
+    return AnalysisConfig(scopes={}, parity=ParityConfig(
+        canonical_module="pkg/fleet.py",
+        engine_modules=("pkg/fleet.py", "pkg/vec.py"),
+        shared_functions=("assemble_fleet_report", "auto_concurrency"),
+        required_calls=("assemble_fleet_report",),
+        watch_prefix="pkg/",
+    ))
+
+
+def test_par_flags_inline_reaggregation(tmp_path):
+    """The seeded pattern: an engine growing its own np.mean instead of
+    funnelling through the shared report assembly."""
+    res = scan(tmp_path, {
+        "pkg/fleet.py": """
+            import numpy as np
+
+            def assemble_fleet_report(reports):
+                return float(np.mean(reports))
+
+            def run(reports):
+                return assemble_fleet_report(reports)
+        """,
+        "pkg/vec.py": """
+            import numpy as np
+
+            class Vec:
+                def run(self, reports):
+                    return float(np.mean(reports))
+        """,
+    }, config=parity_cfg())
+    assert fired(res) == ["PAR001", "PAR002"]
+    assert all(v.path == "pkg/vec.py" for v in res.violations)
+
+
+def test_par_clean_when_funnelled(tmp_path):
+    res = scan(tmp_path, {
+        "pkg/fleet.py": """
+            import numpy as np
+
+            def assemble_fleet_report(reports):
+                total = sum(r for r in reports)
+                return float(np.mean(reports)) + total
+
+            def run(reports):
+                return assemble_fleet_report(reports)
+        """,
+        "pkg/vec.py": """
+            from pkg.fleet import assemble_fleet_report
+
+            class Vec:
+                def run(self, reports):
+                    n_live = sum(1 for r in reports if r)
+                    return assemble_fleet_report(reports), n_live
+        """,
+    }, config=parity_cfg())
+    # aggregation inside the shared function is the shared path; counting
+    # sums are not float aggregation
+    assert res.ok, "\n".join(v.format() for v in res.violations)
+
+
+def test_par002_flags_float_sum_in_engine(tmp_path):
+    res = scan(tmp_path, {
+        "pkg/fleet.py": """
+            def assemble_fleet_report(reports):
+                return len(reports)
+
+            def run(reports):
+                return assemble_fleet_report(reports)
+        """,
+        "pkg/vec.py": """
+            from pkg.fleet import assemble_fleet_report
+
+            def run(reports):
+                moved = sum(r.moved_mb for r in reports)
+                return assemble_fleet_report(reports), moved
+        """,
+    }, config=parity_cfg())
+    assert fired(res) == ["PAR002"]
+    assert "sum" in res.violations[0].message
+
+
+def test_par003_flags_drift_copy(tmp_path):
+    res = scan(tmp_path, {
+        "pkg/fleet.py": """
+            def assemble_fleet_report(reports):
+                return len(reports)
+
+            def run(reports):
+                return assemble_fleet_report(reports)
+        """,
+        "pkg/vec.py": """
+            from pkg.fleet import assemble_fleet_report
+
+            def go(reports):
+                return assemble_fleet_report(reports)
+        """,
+        "pkg/other.py": """
+            def assemble_fleet_report(reports):
+                return len(reports) + 1
+        """,
+    }, config=parity_cfg())
+    assert fired(res) == ["PAR003"]
+    assert res.violations[0].path == "pkg/other.py"
+
+
+def test_par_skips_absent_engine_layout(tmp_path):
+    """Fixture trees without the engine modules must not crash or flag."""
+    res = scan(tmp_path, {"pkg/misc.py": """
+        def f():
+            return 1
+    """}, config=parity_cfg())
+    assert res.ok
+
+
+# ===================== CLI: sarif / changed / cache ==================== #
+def _write(tmp_path, rel, src):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+
+
+def test_cli_sarif_output(tmp_path, capsys):
+    _write(tmp_path, "src/repro/core/x.py", """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=DET004 -- fixture: wrong id, stays live
+    """)
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--format", "sarif"])
+    assert rc == 1
+    sarif = json.loads(capsys.readouterr().out)
+    assert sarif["version"] == "2.1.0"
+    run = sarif["runs"][0]
+    rule_ids = {r["id"] for r in run["tool"]["driver"]["rules"]}
+    assert {"DET001", "DET101", "UNIT001", "PAR001"} <= rule_ids
+    hit = [r for r in run["results"] if r["ruleId"] == "DET001"]
+    assert hit and hit[0]["level"] == "error"
+    loc = hit[0]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/repro/core/x.py"
+    assert loc["region"]["startLine"] == 5
+
+
+def test_cli_sarif_marks_suppressions(tmp_path, capsys):
+    _write(tmp_path, "src/repro/core/x.py", """
+        import time
+
+        def f():
+            return time.time()  # repro-lint: disable=DET001 -- fixture: documented escape hatch
+    """)
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--format", "sarif"])
+    assert rc == 0
+    sarif = json.loads(capsys.readouterr().out)
+    results = sarif["runs"][0]["results"]
+    assert results and results[0]["suppressions"][0]["kind"] == "inSource"
+    assert "escape hatch" in results[0]["suppressions"][0]["justification"]
+
+
+def _git(repo, *args):
+    subprocess.run(
+        ["git", "-c", "user.email=t@example.com", "-c", "user.name=t",
+         *args],
+        cwd=repo, check=True, capture_output=True)
+
+
+def test_cli_changed_filters_to_diff(tmp_path, capsys):
+    """--changed reports only findings in files the working tree touched:
+    a committed violation elsewhere stays the full scan's business."""
+    _write(tmp_path, "src/repro/core/vio.py", """
+        import time
+
+        def f():
+            return time.time()
+    """)
+    _write(tmp_path, "src/repro/core/clean.py", """
+        def g(now_s):
+            return now_s
+    """)
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", ".")
+    _git(tmp_path, "commit", "-qm", "seed")
+
+    # clean tree: fast path, no parsing at all
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--changed"])
+    assert rc == 0
+    assert "no changed python files" in capsys.readouterr().out
+
+    # touch only the clean file: the committed violation is filtered out
+    (tmp_path / "src/repro/core/clean.py").write_text(
+        "def g(now_s):\n    return now_s + 1.0\n")
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--changed"])
+    assert rc == 0
+    capsys.readouterr()
+
+    # an untracked violating file is in the diff and fails the run
+    _write(tmp_path, "src/repro/core/fresh.py", """
+        import time
+
+        def h():
+            return time.time()
+    """)
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--changed"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "fresh.py" in out and "vio.py" not in out
+
+
+def test_cache_round_trip_skips_extraction(tmp_path, monkeypatch):
+    write_files(tmp_path, TWO_DEEP)
+    cache = tmp_path / "facts.json"
+    res1 = run_analysis([tmp_path / "src"], root=tmp_path,
+                        config=default_config(), cache_path=cache)
+    assert fired(res1) == ["DET101"]
+    payload = json.loads(cache.read_text())
+    assert set(payload["files"]) == set(TWO_DEEP)
+
+    # with a warm cache, per-module fact extraction must not run at all
+    import repro.analysis.dataflow as dataflow_mod
+
+    def boom(mod):
+        raise AssertionError(f"extraction re-ran for {mod.rel}")
+
+    monkeypatch.setattr(dataflow_mod, "module_facts", boom)
+    res2 = run_analysis([tmp_path / "src"], root=tmp_path,
+                        config=default_config(), cache_path=cache)
+    assert fired(res2) == ["DET101"]
+    assert res2.violations[0].message == res1.violations[0].message
+
+    # a content change invalidates exactly that file's entry
+    monkeypatch.undo()
+    (tmp_path / "src/repro/util/clockwrap.py").write_text(
+        "def stamp():\n    return 0.0\n")
+    res3 = run_analysis([tmp_path / "src"], root=tmp_path,
+                        config=default_config(), cache_path=cache)
+    assert res3.ok
+
+
+def test_cache_ignores_corrupt_file(tmp_path):
+    write_files(tmp_path, TWO_DEEP)
+    cache = tmp_path / "facts.json"
+    cache.write_text("{not json")
+    res = run_analysis([tmp_path / "src"], root=tmp_path,
+                       config=default_config(), cache_path=cache)
+    assert fired(res) == ["DET101"]
+    json.loads(cache.read_text())  # rewritten valid
+
+
+def test_changed_report_keeps_corpus_context(tmp_path):
+    """report_rels filters the report, not the analysis: the boundary
+    finding in the sim module survives even when only the *helper* module
+    is listed as unchanged context."""
+    write_files(tmp_path, TWO_DEEP)
+    res = run_analysis([tmp_path / "src"], root=tmp_path,
+                       config=default_config(),
+                       report_rels={"src/repro/core/sched.py"})
+    assert fired(res) == ["DET101"]
+    res2 = run_analysis([tmp_path / "src"], root=tmp_path,
+                        config=default_config(),
+                        report_rels={"src/repro/util/clockwrap.py"})
+    assert res2.ok
