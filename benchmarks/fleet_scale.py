@@ -24,6 +24,8 @@ import numpy as np
 from repro.core import (
     EngineConfig,
     FleetRequest,
+    KnowledgeService,
+    ServiceConfig,
     TransferTuner,
     TunerConfig,
     run_fleet,
@@ -65,7 +67,22 @@ def run(smoke: bool = False) -> dict:
     out["vectorized_parity"] = _check_parity(db)
     out["vectorized_scale"] = _bench_scale(db, SCALE_N["smoke" if smoke else "full"])
     out["batched_scoring"] = _bench_batched(db)
+    out["service_admission"] = _service_fleet(hist, PARITY_N)
     return out
+
+
+def _service_fleet(hist, n: int) -> dict:
+    """Admission resolved through the ``KnowledgeService`` facade.
+
+    Mines a fresh DB so the service's streamed refits cannot leak into the
+    shared-DB rows above (the frozen-knowledge runs and the parity check).
+    """
+    db = TransferTuner(TunerConfig(seed=0)).fit(hist).db
+    svc = KnowledgeService(db, ServiceConfig(max_staleness_s=600.0))
+    fr = run_fleet(
+        db, _requests(n), EngineConfig(max_concurrent=4, knowledge=svc)
+    )
+    return {"n": n, "report": fr, "stats": svc.stats()}
 
 
 def _check_parity(db) -> dict:
@@ -184,6 +201,14 @@ def main(smoke: bool = False):
         f"fleet_batched_scoring,{b['batched_us']:.1f},"
         f"{b['points']}pts speedup={b['speedup']:.0f}x vs scalar "
         f"({b['scalar_us']:.0f}us)"
+    )
+    sv = out["service_admission"]
+    st = sv["stats"]
+    fr = sv["report"]
+    print(
+        f"fleet_service_N{sv['n']},{fr.makespan_s * 1e6:.0f},"
+        f"goodput={fr.goodput_mbps:.0f}Mbps refits={st.refits} "
+        f"minibatch={st.minibatch_updates} folded={st.entries_folded}"
     )
     return out
 

@@ -3,10 +3,12 @@ an abrupt load-regime shift (the paper's "harsh network change", fleet-scale).
 
 The offline DB is mined from history collected under light external load;
 mid-run, ``RegimeShiftTraffic`` jumps the load to a level the history never
-saw.  The same staggered fleet then runs twice — once with the DB frozen
-(every achieved throughput discarded, the pre-PR status quo) and once with
-``FleetConfig.refresh`` folding completed sessions back into the DB — and
-the post-shift sessions are scored on prediction accuracy (Eq. 25 against
+saw.  The same staggered fleet then runs three times — with the DB frozen
+(every achieved throughput discarded, the pre-refresh status quo), with the
+legacy ``EngineConfig.refresh`` cadence folding completed sessions back
+into the DB, and with a ``KnowledgeService`` streaming them in through
+mini-batch centroid updates plus bounded-staleness refits — and the
+post-shift sessions are scored on prediction accuracy (Eq. 25 against
 their own converged surface) and steady-rate accuracy vs the single-tenant
 optimum under the shifted load.
 """
@@ -16,12 +18,14 @@ from __future__ import annotations
 import time
 
 from repro.core import (
-    FleetConfig,
+    EngineConfig,
     FleetRequest,
-    FleetScheduler,
+    KnowledgeService,
     RefreshConfig,
+    ServiceConfig,
     TransferTuner,
     TunerConfig,
+    run_fleet,
 )
 from repro.netsim import (
     DiurnalTraffic,
@@ -91,15 +95,26 @@ def run(smoke: bool = False) -> dict:
     hist = _light_history(days, per_day)
     traffic = RegimeShiftTraffic(shift_s=SHIFT_S, before=0.10, after=0.55, ripple=0.02)
     out: dict = {}
-    for policy, refresh in (
-        ("frozen", None),
-        ("refreshed", RefreshConfig(every_completions=2, min_entries=8)),
-    ):
+    for policy in ("frozen", "refreshed", "service"):
         db = TransferTuner(TunerConfig(seed=0)).fit(hist).db
         reqs = _requests(n_pre, n_post, traffic)
-        cfg = FleetConfig(max_concurrent=4, score_vs_single=False, refresh=refresh)
+        if policy == "refreshed":
+            cfg = EngineConfig(
+                max_concurrent=4,
+                score_vs_single=False,
+                refresh=RefreshConfig(every_completions=2, min_entries=8),
+            )
+        elif policy == "service":
+            svc = KnowledgeService(
+                db, ServiceConfig(max_staleness_s=300.0, drift_threshold=0.2)
+            )
+            cfg = EngineConfig(
+                max_concurrent=4, score_vs_single=False, knowledge=svc
+            )
+        else:
+            cfg = EngineConfig(max_concurrent=4, score_vs_single=False)
         t0 = time.perf_counter()
-        report = FleetScheduler(db, config=cfg).run(reqs)
+        report = run_fleet(db, reqs, cfg)
         wall_us = (time.perf_counter() - t0) * 1e6
         acc, pred = _post_shift_scores(reqs, report)
         out[policy] = {
@@ -113,7 +128,7 @@ def run(smoke: bool = False) -> dict:
 
 def main(smoke: bool = False):
     out = run(smoke)
-    for policy in ("frozen", "refreshed"):
+    for policy in ("frozen", "refreshed", "service"):
         o = out[policy]
         fr = o["report"]
         print(
@@ -127,6 +142,12 @@ def main(smoke: bool = False):
     print(
         f"refresh_drift_gain,0,post_acc_delta={d_acc:+.1f}pts "
         f"post_pred_delta={d_pred:+.1f}pts"
+    )
+    s_acc = out["service"]["post_acc"] - out["frozen"]["post_acc"]
+    s_pred = out["service"]["post_pred"] - out["frozen"]["post_pred"]
+    print(
+        f"refresh_drift_service_gain,0,post_acc_delta={s_acc:+.1f}pts "
+        f"post_pred_delta={s_pred:+.1f}pts"
     )
     return out
 

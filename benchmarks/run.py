@@ -29,6 +29,7 @@ MODULES = [
     ("refresh", "benchmarks.refresh_drift"),
     ("offline", "benchmarks.offline_scale"),
     ("faults", "benchmarks.fault_recovery"),
+    ("knowledge", "benchmarks.knowledge_qps"),
 ]
 
 

@@ -7,12 +7,19 @@ through the unified ``run_fleet`` facade; flip ``engine="vectorized"`` in
 the ``EngineConfig`` to use the event-loop engine that scales to 1e5+
 sessions (bit-identical results at this size).
 
+A third run wires admission through the streaming ``KnowledgeService``:
+completed sessions fold back into the knowledge base as mini-batch
+centroid updates, full refits fire only on the drift/staleness bounds,
+and the service's counters report what the stream did.
+
     PYTHONPATH=src python examples/fleet.py
 """
 
 from repro.core import (
     EngineConfig,
     FleetRequest,
+    KnowledgeService,
+    ServiceConfig,
     TransferTuner,
     TunerConfig,
     run_fleet,
@@ -53,3 +60,22 @@ for label, config in [
         f"re-probes={fleet.reprobe_grants} "
         f"(+{fleet.reprobe_denials} storm-damped)"
     )
+
+# Streaming knowledge: a fresh DB (the service mutates it in place) served
+# through the KnowledgeService facade — admission snapshots, per-session
+# probe budgets, and completed-session ingest all resolve through it.
+db2 = TransferTuner(TunerConfig(seed=0)).fit(hist).db
+service = KnowledgeService(
+    db2, ServiceConfig(max_staleness_s=600.0, drift_threshold=0.25)
+)
+fleet = run_fleet(db2, list(requests), EngineConfig(knowledge=service))
+stats = service.stats()
+print(
+    f"  {'streaming knowledge service':28s} cap={fleet.admitted_concurrency} "
+    f"goodput={fleet.goodput_mbps:,.0f} Mbps "
+    f"makespan={fleet.makespan_s:,.0f} s"
+)
+print(
+    f"  {'':28s} minibatch updates={stats.minibatch_updates} "
+    f"refits={stats.refits} entries folded={stats.entries_folded}"
+)

@@ -28,6 +28,10 @@ from repro.core.fleet import (
 from repro.core.engine import (
     EngineConfig, VectorEventHeap, VectorizedFleetEngine, run_fleet,
 )
+from repro.core.service import (
+    AdmissionDecision, KnowledgeService, ProbeBackoffConfig, ProbePolicy,
+    ServiceConfig, ServiceStats, SurfaceCache,
+)
 
 __all__ = [
     "CubicSpline1D", "BicubicSpline", "TricubicSurface", "PolySurface",
@@ -43,4 +47,6 @@ __all__ = [
     "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
     "ReprobeLimiter", "SessionOutcome",
     "EngineConfig", "VectorEventHeap", "VectorizedFleetEngine", "run_fleet",
+    "AdmissionDecision", "KnowledgeService", "ProbeBackoffConfig",
+    "ProbePolicy", "ServiceConfig", "ServiceStats", "SurfaceCache",
 ]

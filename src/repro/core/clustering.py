@@ -159,6 +159,12 @@ class ClusterModel:
     m: int
     method: str
     ch: float
+    # Per-centroid point counts (Sculley 2010 learning-rate state).  Fit
+    # paths persist the final-labeling counts so streaming ``partial_fit``
+    # updates continue the mini-batch schedule the offline fit would have
+    # used; None on models built before this field existed (older pickles,
+    # hand-built models) — ``_ensure_counts`` rebuilds from labels then.
+    counts: np.ndarray | None = None
 
     def assign(self, x: np.ndarray) -> int:
         """Nearest-centroid assignment for a new feature vector."""
@@ -187,6 +193,42 @@ class ClusterModel:
             d2 = ((self.centroids[None] - blk[:, None, :]) ** 2).sum(-1)
             out[i:i + _CHUNK] = d2.argmin(1)
         return out
+
+    def _ensure_counts(self) -> np.ndarray:
+        """Per-centroid counts, rebuilt from the fit labels when absent."""
+        if self.counts is None:
+            if self.labels is not None and self.labels.size:
+                self.counts = np.bincount(
+                    np.asarray(self.labels, np.int64),
+                    minlength=self.m).astype(np.float64)
+            else:
+                self.counts = np.ones(self.m, np.float64)
+        return self.counts
+
+    def partial_fit(self, X: np.ndarray, *,
+                    use_pallas: bool = False) -> np.ndarray:
+        """Fold a mini-batch of new points into the centroids in place.
+
+        One Sculley (2010) mini-batch k-means step, the numpy twin of the
+        jitted ``minibatch_sweep`` arithmetic: assign the batch to the
+        current centroids, then move each winning centroid toward its batch
+        mean with the cumulative 1/counts learning rate.  Assignment goes
+        through :meth:`assign_many`, so routing is arithmetic-identical to
+        the scalar query path regardless of batch size.  Returns the batch
+        labels so callers can reuse them (e.g. ``OfflineDB.update``'s
+        ``assignments=``) without a second assignment pass.
+        """
+        X = np.atleast_2d(np.asarray(X, np.float64))
+        labels = self.assign_many(X, use_pallas=use_pallas)
+        counts = self._ensure_counts()
+        cnt = np.bincount(labels, minlength=self.m).astype(np.float64)
+        sums = np.zeros_like(self.centroids, np.float64)
+        np.add.at(sums, labels, X)
+        counts += cnt
+        lr = np.where(cnt > 0, cnt / np.maximum(counts, 1.0), 0.0)
+        tgt = sums / np.maximum(cnt, 1.0)[:, None]
+        self.centroids += lr[:, None] * (tgt - self.centroids)
+        return labels
 
 
 # --------------------------------------------------------------------- #
@@ -406,7 +448,8 @@ def fit_clusters_batched(X: np.ndarray, *, m_range: range | None = None,
             cnt_m = cnt[i, :m]
         # clusters that won no points keep their trained (stale) centroid
         cents = np.where((cnt_m > 0)[:, None], cents, C[i, :m])
-        cand = ClusterModel(lab, cents, m, "kmeans++", score)
+        cand = ClusterModel(lab, cents, m, "kmeans++", score,
+                            counts=np.asarray(cnt_m, np.float64).copy())
         if best is None or score > best.ch:
             best, best_i = cand, i
     assert best is not None  # ms non-empty, checked above
@@ -450,7 +493,9 @@ def fit_clusters(X: np.ndarray, *, m_range: range | None = None,
         score = ch_index(X, labels)
         cents = np.stack([X[labels == k].mean(0) if (labels == k).any()
                           else X.mean(0) for k in range(m)])
-        cand = ClusterModel(labels, cents, m, method, score)
+        cand = ClusterModel(labels, cents, m, method, score,
+                            counts=np.bincount(
+                                labels, minlength=m).astype(np.float64))
         if best is None or score > best.ch:
             best = cand
     if best is None:

@@ -65,6 +65,12 @@ class EngineConfig:
     bulk_chunks: int = 8
     use_pallas: bool = False
     contention: str = "auto"  # vectorized engine only; threaded is always exact
+    # Streaming knowledge service (core.service.KnowledgeService).  When set,
+    # both engines resolve admission snapshots, fold completed sessions, and
+    # ask for probe budgets through the service instead of the raw-DB +
+    # refresher plumbing; it supersedes ``refresh`` (setting both is an
+    # error).  None (the default) keeps the legacy path bit-identical.
+    knowledge: object | None = None
 
     def __post_init__(self):
         self.validate()
@@ -85,6 +91,20 @@ class EngineConfig:
                 "max_concurrent must be positive or None (auto), "
                 f"got {self.max_concurrent}"
             )
+        if self.knowledge is not None:
+            from repro.core.service.api import KnowledgeService
+
+            if not isinstance(self.knowledge, KnowledgeService):
+                raise TypeError(
+                    "knowledge must be a KnowledgeService or None, "
+                    f"got {type(self.knowledge).__name__}"
+                )
+            if self.refresh is not None:
+                raise ValueError(
+                    "knowledge and refresh are mutually exclusive: the "
+                    "service's own ServiceConfig governs how completed "
+                    "sessions fold back into the DB"
+                )
         if self.recovery is not None and self.faults is None:
             warnings.warn(
                 "EngineConfig: recovery is configured but faults is None — "
@@ -179,4 +199,5 @@ def run_fleet(
         bulk_chunks=config.bulk_chunks,
         config=config.to_fleet_config(),
         use_pallas=config.use_pallas,
+        knowledge=config.knowledge,
     ).run(requests)

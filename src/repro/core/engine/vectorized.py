@@ -214,11 +214,19 @@ class VectorizedFleetEngine:
         # The limiter is consulted directly (no turn wrapper): gate events
         # already arrive in simulated-time order through the event heap.
         limiter = ReprobeLimiter(cfg.reprobe_interval_s, n_active_fn=counter)
+        knowledge = getattr(cfg, "knowledge", None)
+        if knowledge is not None and knowledge.db_for(None) is not self.db:
+            raise ValueError(
+                "knowledge service must serve the same OfflineDB the "
+                "engine runs against"
+            )
         refresher = (
             KnowledgeRefresher(self.db, link, cfg.refresh)
-            if cfg.refresh is not None
+            if cfg.refresh is not None and knowledge is None
             else None
         )
+        # Service counters are cumulative across runs; report the delta.
+        k_stats0 = knowledge.stats() if knowledge is not None else None
         cap = cfg.max_concurrent or auto_concurrency(
             self.db,
             requests,
@@ -257,7 +265,15 @@ class VectorizedFleetEngine:
             state.admit_s[i] = admit_time[i]
             # Knowledge snapshot resolved at admission, in event order —
             # the same refresh-consistency point as the threaded engine.
-            cluster = self.db.query(request_features(link, reqs[i].dataset))
+            feats = request_features(link, reqs[i].dataset)
+            if knowledge is not None:
+                cluster = knowledge.query_cluster(None, feats)
+                budget = knowledge.probe_budget(
+                    None, admit_time[i], cfg.max_samples
+                )
+            else:
+                cluster = self.db.query(feats)
+                budget = cfg.max_samples
             env = self._make_tenant_env(reqs[i], i, shared)
             env.clock_s = admit_time[i]
             envs[i] = env
@@ -265,7 +281,7 @@ class VectorizedFleetEngine:
             sampler = AdaptiveSampler(
                 self.db,
                 z=cfg.z,
-                max_samples=cfg.max_samples,
+                max_samples=budget,
                 bulk_chunks=cfg.bulk_chunks,
                 reprobe_gate=limiter,
                 recovery=recovery,
@@ -324,7 +340,15 @@ class VectorizedFleetEngine:
                 # serialized turn: fold knowledge in, re-admit the killed
                 # session's residual, admit the next queued request, then
                 # stop counting as active.
-                if refresher is not None and rep is not None and not rep.interrupted:
+                if knowledge is not None and rep is not None:
+                    # The service handles interrupted/collapsed sessions
+                    # itself (fault signal, no fold-in).
+                    knowledge.observe(rep, reqs[i].dataset, link=link, now_s=now)
+                elif (
+                    refresher is not None
+                    and rep is not None
+                    and not rep.interrupted
+                ):
                     refresher.observe(rep, reqs[i].dataset, now_s=now)
                 enqueue_recovery(i, now)
                 admit_next(now)
@@ -349,9 +373,15 @@ class VectorizedFleetEngine:
             reprobe_grants=limiter.grants,
             reprobe_denials=limiter.denials,
             admitted_concurrency=min(cap, n),
-            refreshes=refresher.refreshes if refresher is not None else 0,
+            refreshes=(
+                knowledge.stats().refits - k_stats0.refits
+                if knowledge is not None
+                else (refresher.refreshes if refresher is not None else 0)
+            ),
             refreshed_entries=(
-                refresher.entries_folded if refresher is not None else 0
+                knowledge.stats().entries_folded - k_stats0.entries_folded
+                if knowledge is not None
+                else (refresher.entries_folded if refresher is not None else 0)
             ),
             kills=n_kills,
             recoveries=n_recoveries,

@@ -427,6 +427,7 @@ class FleetScheduler:
         bulk_chunks: int = 8,
         config: FleetConfig | None = None,
         use_pallas: bool = False,
+        knowledge=None,
     ):
         self.db = db
         self.z = z
@@ -434,6 +435,16 @@ class FleetScheduler:
         self.bulk_chunks = bulk_chunks
         self.config = config or FleetConfig()
         self.use_pallas = use_pallas
+        # Optional core.service.KnowledgeService (duck-typed to keep this
+        # module service-import-free).  When set it replaces the refresher:
+        # admission snapshots, session fold-in, and probe budgets all route
+        # through the service; None keeps the legacy path bit-identical.
+        self.knowledge = knowledge
+        if knowledge is not None and knowledge.db_for(None) is not db:
+            raise ValueError(
+                "knowledge service must serve the same OfflineDB the "
+                "scheduler runs against"
+            )
 
     # ------------------------------------------------------------------ #
     # contention-aware admission
@@ -492,11 +503,14 @@ class FleetScheduler:
         limiter = ReprobeLimiter(
             self.config.reprobe_interval_s, n_active_fn=clock.n_active_at
         )
+        knowledge = self.knowledge
         refresher = (
             KnowledgeRefresher(self.db, link, self.config.refresh)
-            if self.config.refresh is not None
+            if self.config.refresh is not None and knowledge is None
             else None
         )
+        # Service counters are cumulative across runs; report the delta.
+        k_stats0 = knowledge.stats() if knowledge is not None else None
         cap = self.config.max_concurrent or self._auto_concurrency(requests, link)
         recovery = self.config.recovery
 
@@ -518,6 +532,10 @@ class FleetScheduler:
         # deterministic, fully-consistent cluster, instead of racing its
         # wall-clock db.query against a concurrent refit swap.
         admitted_cluster = [None] * n
+        # Probe budget per attempt, resolved at admission (same serialized
+        # point as the knowledge snapshot) so backoff decisions land in
+        # simulated-time order; without a service this is a constant.
+        admit_budget = [self.max_samples] * n
         admit_events = [threading.Event() for _ in range(n)]
         threads: list[threading.Thread] = []  # guarded-by: admit_lock
         pending = collections.deque(  # guarded-by: admit_lock
@@ -534,9 +552,17 @@ class FleetScheduler:
                     return
                 i = pending.popleft()
                 admit_time[i] = max(reqs[i].start_clock_s, now_s)
-                admitted_cluster[i] = self.db.query(
-                    request_features(link, reqs[i].dataset)
-                )
+                feats = request_features(link, reqs[i].dataset)
+                if knowledge is not None:
+                    # Same snapshot object db.query would return (the
+                    # service routes through the same cluster model), plus
+                    # the backoff policy's probe budget for this admission.
+                    admitted_cluster[i] = knowledge.query_cluster(None, feats)
+                    admit_budget[i] = knowledge.probe_budget(
+                        None, admit_time[i], self.max_samples
+                    )
+                else:
+                    admitted_cluster[i] = self.db.query(feats)
                 # Register with the fleet clock BEFORE releasing the worker:
                 # from this point every already-running tenant waits for i
                 # whenever i's clock is the fleet minimum, even if i's thread
@@ -575,6 +601,7 @@ class FleetScheduler:
                 end_clock.append(0.0)
                 admit_time.append(0.0)
                 admitted_cluster.append(None)
+                admit_budget.append(self.max_samples)
                 admit_events.append(threading.Event())
                 pending.append(j)
                 th = threading.Thread(target=worker, args=(j,), daemon=True)
@@ -598,7 +625,7 @@ class FleetScheduler:
                 sampler = AdaptiveSampler(
                     self.db,
                     z=self.z,
-                    max_samples=self.max_samples,
+                    max_samples=admit_budget[i],
                     bulk_chunks=self.bulk_chunks,
                     reprobe_gate=gate,
                     recovery=recovery,
@@ -633,7 +660,13 @@ class FleetScheduler:
                 if env is not None:
                     with clock.turn(env):
                         rep = reports[i]
-                        if (
+                        if knowledge is not None and rep is not None:
+                            # The service handles interrupted/collapsed
+                            # sessions itself (fault signal, no fold-in).
+                            knowledge.observe(
+                                rep, reqs[i].dataset, link=link, now_s=now
+                            )
+                        elif (
                             refresher is not None
                             and rep is not None
                             and not rep.interrupted
@@ -665,6 +698,15 @@ class FleetScheduler:
         if errors:
             raise errors[0]
 
+        if knowledge is not None:
+            k_stats = knowledge.stats()
+            n_refreshes = k_stats.refits - k_stats0.refits
+            n_refreshed = k_stats.entries_folded - k_stats0.entries_folded
+        else:
+            n_refreshes = refresher.refreshes if refresher is not None else 0
+            n_refreshed = (
+                refresher.entries_folded if refresher is not None else 0
+            )
         return assemble_fleet_report(
             self.db,
             self.config.testbed,
@@ -679,10 +721,8 @@ class FleetScheduler:
             reprobe_grants=limiter.grants,
             reprobe_denials=limiter.denials,
             admitted_concurrency=min(cap, n),
-            refreshes=refresher.refreshes if refresher is not None else 0,
-            refreshed_entries=(
-                refresher.entries_folded if refresher is not None else 0
-            ),
+            refreshes=n_refreshes,
+            refreshed_entries=n_refreshed,
             kills=n_kills[0],
             recoveries=n_recoveries[0],
         )

@@ -228,7 +228,12 @@ def _bootstrap_clone(donor: OfflineDB, origin: tuple[str, str],
     cm = donor.cluster_model
     cents = cm.centroids.copy()
     cents[:, 0], cents[:, 1] = bw_t, rtt_t
-    model = ClusterModel(cm.labels.copy(), cents, cm.m, cm.method, cm.ch)
+    # Clone counts start at 1 per centroid, not the donor's: the donor's
+    # point mass describes another network, and streaming partial_fit on
+    # the clone should let the new network's own observations dominate the
+    # Sculley learning rate from the first mini-batch.
+    model = ClusterModel(cm.labels.copy(), cents, cm.m, cm.method, cm.ch,
+                         counts=np.ones(cm.m, np.float64))
     return OfflineDB(clusters, model, donor.bounds, donor.n_load_bins,
                      0.0, origin=origin)
 

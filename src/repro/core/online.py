@@ -226,6 +226,14 @@ class AdaptiveSampler:
 
         Generator: yields ``(clock_s, PHASE_PROBE, params)`` before each
         probe transfer; returns the converged surface.
+
+        A budget of 1 is the *reduced-probe* session the knowledge
+        service's probe-rate backoff relies on (``core.service.backoff``):
+        the discriminative probe consumes the whole budget, the Algorithm-1
+        loop is skipped, and the session proceeds on the closest surface
+        that single probe identified — one probe instead of up to
+        ``max_samples``, with the fleet engines restoring the full budget
+        whenever the policy deems the link volatile again.
         """
         surfaces = cluster.sorted_by_load()
         if probe_mb is None:

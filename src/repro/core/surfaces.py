@@ -23,6 +23,15 @@ from repro.netsim.loggen import LogEntry
 # see _aggregate_grid.
 SMOOTH_ALPHA = 4.0
 
+# Capacity of the per-surface point-prediction memo (ThroughputSurface
+# .predict).  The online phase only queries the integer lattice, so the
+# default covers a full 16^3 ParamBounds lattice without ever evicting;
+# larger bounds (or adversarial query streams) evict in FIFO insertion
+# order, which is deterministic for a deterministic call sequence.  Module
+# level (not per-instance) so tests can exercise the cap without touching
+# dataclass equality.
+PREDICT_CACHE_CAP = 4096
+
 
 @dataclasses.dataclass
 class ThroughputSurface:
@@ -50,6 +59,14 @@ class ThroughputSurface:
         v = self._predict_cache.get(key)
         if v is None:
             v = float(self.surface(float(prm.p), float(prm.cc), float(prm.pp)))
+            # Bounded memo: evict the oldest insertion once the cap is hit
+            # (dicts iterate in insertion order).  Values are pure functions
+            # of the key, so eviction can never change a prediction — only
+            # whether it is recomputed — and long-running fleets stop
+            # growing the cache without limit.  pop(..., None) keeps the
+            # GIL-atomic race between threaded-scheduler workers benign.
+            if len(self._predict_cache) >= PREDICT_CACHE_CAP:
+                self._predict_cache.pop(next(iter(self._predict_cache)), None)
             self._predict_cache[key] = v
         return v
 

@@ -138,13 +138,22 @@ def build_requests(sc: Scenario) -> list[FleetRequest]:
 
 
 def run_scenario(db, sc: Scenario, *, recovery: bool | None = None,
-                 engine: str = "threaded") -> FleetReport:
+                 engine: str = "threaded",
+                 service: bool = False) -> FleetReport:
     """Run one scenario against a pre-built DB via the ``run_fleet`` facade.
 
     ``recovery`` overrides the scenario's own flag (the on-vs-off
     comparisons use this); ``engine`` selects the scheduler (the
-    threaded-vs-vectorized parity tests run every cell through both)."""
+    threaded-vs-vectorized parity tests run every cell through both).
+    ``service=True`` routes knowledge through a ``KnowledgeService``
+    (streaming ingest in place of the cadence refresher) — opt-in, so the
+    default path stays bit-identical to the legacy golden traces."""
     rec = sc.recovery if recovery is None else recovery
+    knowledge = None
+    if service:
+        from repro.core.service import KnowledgeService, ServiceConfig
+        knowledge = KnowledgeService(db, ServiceConfig(
+            max_staleness_s=120.0, drift_threshold=0.1))
     with warnings.catch_warnings():
         # Fault-free cells deliberately configure recovery — the matrix's
         # "recovery must not perturb fault-free fleets" invariant — so the
@@ -157,7 +166,8 @@ def run_scenario(db, sc: Scenario, *, recovery: bool | None = None,
             faults=build_faults(sc),
             recovery=RecoveryConfig() if rec else None,
             refresh=RefreshConfig(every_completions=2, min_entries=4)
-            if sc.refresh else None,
+            if sc.refresh and not service else None,
+            knowledge=knowledge,
         )
     return run_fleet(db, build_requests(sc), config)
 

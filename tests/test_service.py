@@ -1,0 +1,420 @@
+"""Streaming knowledge service: incremental ingest vs full refit, bounded
+staleness, admission-cache LRU determinism, probe-rate backoff golden
+traces, the predict-memo cap, and the legacy refresher/config shims."""
+
+import numpy as np
+import pytest
+
+import repro.core.surfaces as surfaces_mod
+from repro.core import (
+    AdmissionDecision,
+    EngineConfig,
+    FleetRequest,
+    KnowledgeRefresher,
+    KnowledgeService,
+    MultiNetworkDB,
+    MultiNetworkRefresher,
+    ProbeBackoffConfig,
+    ProbePolicy,
+    RefreshConfig,
+    ServiceConfig,
+    SurfaceCache,
+    TransferTuner,
+    TunerConfig,
+    label_agreement,
+    run_fleet,
+)
+from repro.core.clustering import fit_clusters
+from repro.core.service import DEFAULT_PAIR
+from repro.core.service.ingest import IncrementalIngestor
+from repro.netsim import (
+    XSEDE,
+    generate_history,
+    generate_multi_network_history,
+    make_dataset,
+    make_testbed,
+)
+
+START = 4 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def history():
+    env = make_testbed("xsede", seed=3)
+    return generate_history(env, days=4, transfers_per_day=120, seed=0)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    # Held-out entries to stream in (different env seed: genuinely new data).
+    env = make_testbed("xsede", seed=11)
+    return generate_history(env, days=1, transfers_per_day=120, seed=42)
+
+
+def _db(history, seed=0):
+    return TransferTuner(TunerConfig(seed=seed)).fit(history).db
+
+
+@pytest.fixture()
+def db(history):
+    # function-scoped: ingest mutates the DB
+    return _db(history)
+
+
+# ----------------- incremental centroids vs full refit ----------------- #
+def _blobs(n_per, seed):
+    rng = np.random.default_rng(seed)
+    centers = np.array(
+        [[0.0, 0.0, 0.0, 0.0], [6.0, 6.0, 0.0, 6.0], [0.0, 6.0, 6.0, 0.0]]
+    )
+    X = np.concatenate(
+        [c + rng.normal(0.0, 0.4, (n_per, 4)) for c in centers]
+    )
+    rng.shuffle(X)
+    return X
+
+
+def test_partial_fit_tracks_full_refit_labeling():
+    """Streaming mini-batch updates must land in the same partition a full
+    refit over the union would find (pinned model order: the test is about
+    centroid tracking, not CH model selection)."""
+    X0, X1 = _blobs(50, seed=1), _blobs(50, seed=2)
+    streamed = fit_clusters(X0, m_range=range(3, 4), seed=0)
+    for i in range(0, len(X1), 30):
+        streamed.partial_fit(X1[i : i + 30])
+    full = fit_clusters(np.concatenate([X0, X1]), m_range=range(3, 4), seed=0)
+    union = np.concatenate([X0, X1])
+    agree = label_agreement(
+        streamed.assign_many(union), full.assign_many(union)
+    )
+    assert agree >= 0.95
+
+
+def test_partial_fit_learning_rate_state_persists():
+    X = _blobs(50, seed=1)
+    cm = fit_clusters(X, m_range=range(3, 4), seed=0)
+    counts0 = cm._ensure_counts().copy()
+    assert counts0.sum() == pytest.approx(len(X))
+    cm.partial_fit(_blobs(10, seed=3))
+    assert cm.counts.sum() == pytest.approx(len(X) + 30)
+
+
+# --------------------- bounded-staleness ingest ------------------------ #
+def test_ingest_minibatch_without_refit(db, stream):
+    ing = IncrementalIngestor(db, max_staleness_s=600.0, drift_threshold=5.0)
+    before = list(db.clusters)
+    t0 = stream[0].timestamp_s
+    touched = ing.ingest(stream[:40], now_s=t0)
+    assert touched == set()  # neither bound tripped: no full refit
+    assert ing.minibatch_updates == 1
+    assert ing.pending_entries == 40
+    assert all(a is b for a, b in zip(db.clusters, before))  # no swaps
+
+
+def test_staleness_bound_forces_refit(db, stream):
+    ing = IncrementalIngestor(db, max_staleness_s=600.0, drift_threshold=5.0)
+    before = list(db.clusters)
+    t0 = stream[0].timestamp_s
+    ing.ingest(stream[:40], now_s=t0)
+    # An empty batch is a pure clock tick: age alone must force the flush.
+    touched = ing.ingest([], now_s=t0 + 700.0)
+    assert touched and ing.refits_staleness == len(touched)
+    assert ing.pending_entries == 0
+    assert ing.entries_folded == 40
+    for k in touched:
+        assert db.clusters[k] is not before[k]  # atomic swap published
+        assert ing.staleness_s(k, t0 + 700.0) == 0.0
+
+
+def test_drift_bound_forces_refit(db, stream):
+    ing = IncrementalIngestor(
+        db, max_staleness_s=None, drift_threshold=1e-12
+    )
+    t0 = stream[0].timestamp_s
+    touched = ing.ingest(stream[:40], now_s=t0)
+    # Any centroid motion at all trips an epsilon threshold.
+    assert touched and ing.refits_drift == len(touched)
+    for k in touched:  # re-anchored: drift is measured from the new refit
+        assert ing.drift(k) == 0.0
+
+
+def test_refresh_now_flushes_everything(db, stream):
+    ing = IncrementalIngestor(db, max_staleness_s=None, drift_threshold=5.0)
+    ing.ingest(stream[:40], now_s=stream[0].timestamp_s)
+    touched = ing.refresh_now()
+    assert touched and ing.refits_forced == len(touched)
+    assert ing.pending_entries == 0 and ing.entries_folded == 40
+    assert ing.refresh_now() == set()  # nothing left to flush
+
+
+def test_ingest_deterministic_across_repeats(history, stream):
+    def go():
+        d = _db(history)
+        ing = IncrementalIngestor(
+            d, max_staleness_s=300.0, drift_threshold=0.25
+        )
+        out = []
+        for i in range(0, 120, 40):
+            sel = stream[i : i + 40]
+            out.append(
+                sorted(ing.ingest(sel, now_s=sel[-1].timestamp_s))
+            )
+        return out, np.array(d.cluster_model.centroids)
+
+    (ta, ca), (tb, cb) = go(), go()
+    assert ta == tb
+    np.testing.assert_array_equal(ca, cb)
+
+
+# ------------------------- admission cache ----------------------------- #
+def test_service_query_sub_ms_decision(db):
+    svc = KnowledgeService(db)
+    feats = db.clusters[0].entries[0].features()
+    dec = svc.query(None, feats)
+    assert isinstance(dec, AdmissionDecision)
+    cc, p, pp = dec.as_tuple()
+    for v in (cc, p, pp):
+        assert 1 <= v <= 16
+    assert dec.predicted_mbps > 0.0
+    again = svc.query(None, feats)
+    assert again == dec
+    st = svc.stats()
+    assert st.queries == 2
+    assert st.cache_hits == 1 and st.cache_misses == 1
+
+
+def test_cache_invalidated_by_refit(db, stream):
+    svc = KnowledgeService(
+        db, ServiceConfig(max_staleness_s=None, drift_threshold=1e-12)
+    )
+    feats = stream[0].features()
+    svc.query(None, feats)
+    touched = svc.ingest(stream[:40], now_s=stream[0].timestamp_s)
+    assert touched.get(DEFAULT_PAIR)  # epsilon drift: refit guaranteed
+    k = db.cluster_model.assign(np.asarray(feats, np.float64))
+    if k in touched[DEFAULT_PAIR]:
+        svc.query(None, feats)
+        assert svc.stats().cache_invalidations >= 1
+
+
+def test_cache_lru_eviction_deterministic(db):
+    def go():
+        cache = SurfaceCache(capacity=2)
+        for pair in [("a", "a"), ("b", "b"), ("c", "c"), ("a", "a")]:
+            cache.lookup(pair, db, 0)
+        return cache.stats()
+
+    st = go()
+    assert st["pairs"] == 2
+    assert st["evictions"] == 2  # a evicted by c, then b evicted by a
+    assert st["misses"] == 4  # the re-lookup of a is a fresh build
+    assert st == go()
+
+
+def test_cache_warm_prebuilds_all_clusters(db):
+    svc = KnowledgeService(db)
+    n = svc.warm()
+    assert n == len(db.clusters)
+    for ck in db.clusters:
+        assert ck._stack is not None  # batched view pre-warmed
+    built = svc.stats().cache_misses  # warm() paid every build up front
+    svc.query(None, db.clusters[0].entries[0].features())
+    assert svc.stats().cache_misses == built  # the query was a pure hit
+
+
+# ---------------------- predict-memo cap (bugfix) ---------------------- #
+def test_predict_cache_capped_with_parity(db, monkeypatch):
+    from repro.netsim import TransferParams
+
+    monkeypatch.setattr(surfaces_mod, "PREDICT_CACHE_CAP", 4)
+    s = db.clusters[0].surfaces[0]
+    s._predict_cache.clear()
+    pts = [TransferParams(cc, p, 2) for cc in (1, 3, 5) for p in (2, 4, 6)]
+    first = [s.predict(q) for q in pts]
+    assert len(s._predict_cache) <= 4  # cap enforced across 9 inserts
+    # Evicted entries recompute to bit-identical values (memo is pure).
+    assert [s.predict(q) for q in pts] == first
+
+
+# ----------------------- multi-network routing ------------------------- #
+@pytest.fixture(scope="module")
+def multi_hist():
+    return generate_multi_network_history(
+        ["xsede", "didclab"], days=2, transfers_per_day=100, seed=0
+    )
+
+
+def test_service_multi_db_routes_per_pair(multi_hist):
+    mdb = MultiNetworkDB(seed=0).fit(multi_hist)
+    svc = KnowledgeService(mdb)
+    for pair in mdb.networks():
+        e = next(x for x in multi_hist if (x.src, x.dst) == pair)
+        dec = svc.query(pair, e.features())
+        assert isinstance(dec, AdmissionDecision)
+        assert svc.db_for(pair) is mdb.get(*pair)
+    with pytest.raises(ValueError, match="cold-start needs features"):
+        svc.db_for(("nowhere", "nowhere"))
+    # With features the unknown pair bootstraps from the closest network.
+    dec = svc.query(("nowhere", "nowhere"), multi_hist[0].features())
+    assert isinstance(dec, AdmissionDecision)
+    assert mdb.get("nowhere", "nowhere") is not None
+
+
+# ------------------------- probe-rate backoff -------------------------- #
+def test_probe_policy_backoff_and_reset():
+    cfg = ProbeBackoffConfig(
+        base_interval_s=100.0, max_interval_s=400.0, growth=2.0, window=3
+    )
+    pol = ProbePolicy(cfg)
+    pair = ("a", "b")
+    assert pol.probe_budget(pair, 0.0, 3) == 3  # first probe is full
+    assert pol.probe_budget(pair, 50.0, 3) == 1  # inside the interval
+    assert pol.probe_budget(pair, 100.0, 3) == 3  # interval elapsed
+    for _ in range(3):  # one quiet window: cv == 0
+        pol.observe(pair, 1000.0)
+    assert pol.interval_s(pair) == 200.0
+    for _ in range(6):  # two more quiet windows saturate at the ceiling
+        pol.observe(pair, 1000.0)
+    assert pol.interval_s(pair) == 400.0
+    assert pol.stats()["backoffs"] == 3
+    pol.observe(pair, 1000.0)
+    pol.observe(pair, 10.0)  # violent swing inside one window
+    pol.observe(pair, 2000.0)
+    assert pol.interval_s(pair) == 100.0
+    assert pol.stats()["resets"] == 1
+    for _ in range(3):
+        pol.observe(pair, 1000.0)
+    pol.notify_fault(pair)
+    assert pol.interval_s(pair) == 100.0
+    assert pol.probe_budget(pair, 100.0, 3) == 3  # fault forces a full probe
+
+
+def test_probe_policy_zero_rate_counts_as_fault():
+    pol = ProbePolicy(ProbeBackoffConfig(window=2))
+    pair = ("a", "b")
+    pol.probe_budget(pair, 0.0, 3)
+    pol.observe(pair, 0.0)
+    assert pol.probe_budget(pair, 1.0, 3) == 3  # interval clock cleared
+
+
+# ------------------------ fleet golden traces -------------------------- #
+def _reqs(n=5):
+    return [
+        FleetRequest(
+            dataset=make_dataset("medium", 30 + i),
+            env_seed=200 + i,
+            start_clock_s=START,
+            constant_load=0.15,
+        )
+        for i in range(n)
+    ]
+
+
+def _service_run(history, engine, backoff=None):
+    d = _db(history)
+    svc = KnowledgeService(
+        d,
+        ServiceConfig(
+            max_staleness_s=30.0, drift_threshold=0.05, backoff=backoff
+        ),
+    )
+    cfg = EngineConfig(engine=engine, max_concurrent=2, knowledge=svc)
+    return run_fleet(d, _reqs(), cfg), svc.stats()
+
+
+def test_fleet_service_deterministic_and_engine_identical(history):
+    a, sa = _service_run(history, "threaded")
+    b, sb = _service_run(history, "threaded")
+    assert a == b and sa == sb  # trace-stable across repeats
+    assert sa.minibatch_updates > 0 and sa.entries_folded > 0
+    assert a.refreshes == sa.refits and a.refreshed_entries > 0
+    v, sv = _service_run(history, "vectorized")
+    assert v == a and sv == sa  # both engines share one service trace
+
+
+def test_fleet_backoff_at_full_budget_is_bit_identical(history):
+    """A backoff policy whose reduced budget meets the engine's own budget
+    never changes a session — traces must match the no-backoff service run
+    bit for bit (the RecoveryConfig-style opt-in guarantee)."""
+    base, _ = _service_run(history, "threaded")
+    no_op = ProbeBackoffConfig(reduced_budget=64)
+    got, _ = _service_run(history, "threaded", backoff=no_op)
+    assert got == base
+
+
+def test_fleet_backoff_reduces_probes_deterministically(history):
+    base, _ = _service_run(history, "threaded")
+    slow = ProbeBackoffConfig(
+        base_interval_s=10_000.0, max_interval_s=40_000.0, reduced_budget=1
+    )
+    a, sa = _service_run(history, "threaded", backoff=slow)
+    b, sb = _service_run(history, "threaded", backoff=slow)
+    assert a == b and sa == sb
+    assert a != base  # later admissions really ran reduced-probe sessions
+    assert a.samples_p50 <= base.samples_p50
+
+
+# ----------------------- config + legacy shims ------------------------- #
+def test_service_config_validation():
+    with pytest.raises(ValueError):
+        ServiceConfig(max_staleness_s=0.0)
+    with pytest.raises(ValueError):
+        ServiceConfig(drift_threshold=-1.0)
+    with pytest.raises(ValueError):
+        ServiceConfig(cache_pairs=0)
+    with pytest.raises(TypeError):
+        ServiceConfig(backoff=300.0)
+    with pytest.raises(ValueError):
+        ProbeBackoffConfig(max_interval_s=1.0)
+    with pytest.raises(ValueError):
+        ProbeBackoffConfig(window=1)
+
+
+def test_refresh_config_shim_round_trips(db):
+    rc = RefreshConfig(
+        every_completions=3, every_sim_s=450.0, min_entries=6,
+        batched_fit=False,
+    )
+    with pytest.warns(DeprecationWarning, match="RefreshConfig"):
+        svc = KnowledgeService(db, rc)
+    assert svc.config.max_staleness_s == 450.0
+    assert svc.config.to_refresh_config() == rc
+    assert ServiceConfig.from_refresh_config(rc).to_refresh_config() == rc
+    with pytest.raises(TypeError, match="ServiceConfig"):
+        KnowledgeService(db, config=42)
+    with pytest.raises(TypeError, match="OfflineDB"):
+        KnowledgeService("not a db")
+
+
+def test_from_legacy_to_legacy(db, multi_hist):
+    rc = RefreshConfig(every_completions=2, every_sim_s=300.0, min_entries=4)
+    svc = KnowledgeService.from_legacy(KnowledgeRefresher(db, XSEDE, rc))
+    assert svc.knowledge is db
+    assert svc.config.max_staleness_s == 300.0
+    back = svc.to_legacy(XSEDE)
+    assert isinstance(back, KnowledgeRefresher)
+    assert back.db is db and back.config == rc
+    mdb = MultiNetworkDB(seed=0).fit(multi_hist)
+    msvc = KnowledgeService.from_legacy(MultiNetworkRefresher(mdb, rc))
+    assert msvc.knowledge is mdb
+    assert isinstance(msvc.to_legacy(), MultiNetworkRefresher)
+    with pytest.raises(TypeError):
+        KnowledgeService.from_legacy(rc)
+
+
+def test_engine_config_knowledge_validation(history):
+    with pytest.raises(TypeError, match="KnowledgeService"):
+        EngineConfig(knowledge=42)
+    d = _db(history)
+    svc = KnowledgeService(d)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        EngineConfig(knowledge=svc, refresh=RefreshConfig())
+    other = _db(history, seed=1)
+    with pytest.raises(ValueError, match="same OfflineDB"):
+        run_fleet(other, _reqs(2), EngineConfig(knowledge=svc))
+    with pytest.raises(ValueError, match="same OfflineDB"):
+        run_fleet(
+            other,
+            _reqs(2),
+            EngineConfig(engine="vectorized", knowledge=svc),
+        )
