@@ -1,0 +1,140 @@
+"""Sharded fleet engine benchmark: parity first, then sessions/s scaling.
+
+Three gates, in order:
+
+1. **Parity** — at parity scale the strict sharded regime must reproduce
+   the vectorized oracle's ``FleetReport`` bit-for-bit (the same guarantee
+   ``tests/test_engine_shard.py`` locks across the scenario matrix).  A
+   sessions/s number from a diverged engine is worthless, so this runs
+   before any timing.
+2. **Closeness** — the windowed scale regime must stay physically faithful
+   to the strict run it relaxes: every byte delivered, aggregate goodput
+   and makespan within a tight band.
+3. **Scaling** — sessions/s at 4 shards (windowed) vs 1 shard (strict),
+   best-of-3 wall clocks at N=3,000; the windowed regime must clear 1.5x.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    EngineConfig,
+    FleetRequest,
+    TransferTuner,
+    TunerConfig,
+    run_fleet,
+)
+from repro.netsim import generate_history, make_dataset, make_testbed
+
+CLASSES = ["small", "medium", "large"]
+PARITY_N = 8
+SCALE_N = 3_000
+WINDOW_S = 120.0
+CAP = 8
+REPS = 3
+SPEEDUP_GATE = 1.5
+
+
+def _requests(n: int, seed0: int = 500) -> list[FleetRequest]:
+    return [
+        FleetRequest(
+            dataset=make_dataset(CLASSES[i % 3], 30 + i),
+            env_seed=seed0 + i,
+            start_clock_s=4 * 3600.0,
+            constant_load=0.15,
+        )
+        for i in range(n)
+    ]
+
+
+def _check_parity(db) -> dict:
+    reqs = _requests(PARITY_N)
+    vectorized = run_fleet(
+        db, list(reqs), EngineConfig(engine="vectorized", max_concurrent=4)
+    )
+    sharded = run_fleet(
+        db, list(reqs), EngineConfig(engine="sharded", max_concurrent=4)
+    )
+    assert sharded == vectorized, "sharded engine diverged from oracle"
+    return {"n": PARITY_N, "bit_identical": True}
+
+
+def _timed(db, reqs, config) -> dict:
+    best = float("inf")
+    fleet = None
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fleet = run_fleet(db, list(reqs), config)
+        best = min(best, time.perf_counter() - t0)
+    assert fleet is not None and len(fleet.reports) == len(reqs)
+    return {"wall_s": best, "sessions_per_s": len(reqs) / best, "fleet": fleet}
+
+
+def _bench_scaling(db, n: int) -> dict:
+    reqs = _requests(n)
+    base = dict(max_concurrent=CAP, score_vs_single=False)
+    strict = _timed(
+        db, reqs, EngineConfig(engine="sharded", n_shards=1, **base)
+    )
+    windowed = _timed(
+        db,
+        reqs,
+        EngineConfig(
+            engine="sharded", n_shards=4, shard_window_s=WINDOW_S, **base
+        ),
+    )
+    sg = strict["fleet"].goodput_mbps
+    wg = windowed["fleet"].goodput_mbps
+    goodput_err = abs(wg / sg - 1.0)
+    assert goodput_err < 0.10, (
+        f"windowed regime drifted from strict: goodput err {goodput_err:.3f}"
+    )
+    assert all(not r.interrupted for r in windowed["fleet"].reports)
+    speedup = windowed["sessions_per_s"] / strict["sessions_per_s"]
+    return {
+        "n": n,
+        "strict": strict,
+        "windowed": windowed,
+        "goodput_err": goodput_err,
+        "speedup": speedup,
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    days, per_day = (4, 120) if smoke else (10, 180)
+    env = make_testbed("xsede", seed=3)
+    hist = generate_history(env, days=days, transfers_per_day=per_day, seed=0)
+    db = TransferTuner(TunerConfig(seed=0)).fit(hist).db
+    out: dict = {"parity": _check_parity(db)}
+    out["scaling"] = _bench_scaling(db, SCALE_N)
+    return out
+
+
+def main(smoke: bool = False):
+    out = run(smoke)
+    par = out["parity"]
+    print(
+        f"shard_parity_N{par['n']},0,bit_identical={par['bit_identical']}"
+    )
+    sc = out["scaling"]
+    for label, row in (("strict1", sc["strict"]), ("win4", sc["windowed"])):
+        print(
+            f"shard_{label}_N{sc['n']},{row['wall_s'] * 1e6:.0f},"
+            f"sessions_per_s={row['sessions_per_s']:.0f} "
+            f"goodput={row['fleet'].goodput_mbps:.0f}Mbps"
+        )
+    print(
+        f"shard_speedup_N{sc['n']},{sc['speedup'] * 1e6:.0f},"
+        f"{sc['speedup']:.2f}x at 4 shards w={WINDOW_S:.0f}s "
+        f"goodput_err={sc['goodput_err']:.3f}"
+    )
+    assert sc["speedup"] > SPEEDUP_GATE, (
+        f"windowed 4-shard speedup {sc['speedup']:.2f}x "
+        f"missed the {SPEEDUP_GATE}x gate"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     ("ckpt", "benchmarks.ckpt_tuning"),
     ("kernels", "benchmarks.kernels_bench"),
     ("fleet", "benchmarks.fleet_scale"),
+    ("shard", "benchmarks.fleet_shard"),
     ("refresh", "benchmarks.refresh_drift"),
     ("offline", "benchmarks.offline_scale"),
     ("faults", "benchmarks.fault_recovery"),

@@ -61,6 +61,7 @@ class ParityConfig:
     engine_modules: tuple[str, ...] = (
         "src/repro/core/fleet.py",
         "src/repro/core/engine/vectorized.py",
+        "src/repro/core/engine/sharded.py",
     )
     shared_functions: tuple[str, ...] = (
         "predict_demands",

@@ -26,7 +26,8 @@ from repro.core.fleet import (
     SessionOutcome,
 )
 from repro.core.engine import (
-    EngineConfig, VectorEventHeap, VectorizedFleetEngine, run_fleet,
+    EngineConfig, ShardedFleetEngine, VectorEventHeap, VectorizedFleetEngine,
+    run_fleet,
 )
 from repro.core.service import (
     AdmissionDecision, KnowledgeService, ProbeBackoffConfig, ProbePolicy,
@@ -46,7 +47,8 @@ __all__ = [
     "MultiNetworkRefresher", "RefreshConfig", "session_log_entries",
     "FleetConfig", "FleetReport", "FleetRequest", "FleetScheduler",
     "ReprobeLimiter", "SessionOutcome",
-    "EngineConfig", "VectorEventHeap", "VectorizedFleetEngine", "run_fleet",
+    "EngineConfig", "ShardedFleetEngine", "VectorEventHeap",
+    "VectorizedFleetEngine", "run_fleet",
     "AdmissionDecision", "KnowledgeService", "ProbeBackoffConfig",
     "ProbePolicy", "ServiceConfig", "ServiceStats", "SurfaceCache",
 ]

@@ -1,9 +1,12 @@
-"""Unified fleet engines: one ``run_fleet`` facade over two schedulers.
+"""Unified fleet engines: one ``run_fleet`` facade over three schedulers.
 
 ``engine="threaded"`` is the original thread-per-session oracle
 (``repro.core.fleet.FleetScheduler``); ``engine="vectorized"`` is the
 event-loop engine that produces bit-identical ``FleetReport``s at parity
-scale and runs 1e5+ concurrent sessions (``repro.core.engine.vectorized``).
+scale and runs 1e5+ concurrent sessions (``repro.core.engine.vectorized``);
+``engine="sharded"`` partitions fleet slots across per-device event
+frontiers — bit-identical to the vectorized engine at parity scale,
+bulk-synchronous windows above it (``repro.core.engine.sharded``).
 """
 
 from repro.core.engine.api import (
@@ -13,6 +16,14 @@ from repro.core.engine.api import (
     run_fleet,
 )
 from repro.core.engine.heap import VectorEventHeap
+from repro.core.engine.shard import (
+    ShardedEventFrontier,
+    WindowedLinkState,
+)
+from repro.core.engine.sharded import (
+    DEFAULT_SHARD_WINDOW_S,
+    ShardedFleetEngine,
+)
 from repro.core.engine.vectorized import (
     AUTO_CONTENTION_CUTOVER,
     FleetStateArrays,
@@ -21,11 +32,15 @@ from repro.core.engine.vectorized import (
 
 __all__ = [
     "AUTO_CONTENTION_CUTOVER",
+    "DEFAULT_SHARD_WINDOW_S",
     "EngineConfig",
     "FleetStateArrays",
+    "ShardedEventFrontier",
+    "ShardedFleetEngine",
     "VALID_CONTENTION",
     "VALID_ENGINES",
     "VectorEventHeap",
     "VectorizedFleetEngine",
+    "WindowedLinkState",
     "run_fleet",
 ]

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 
+from repro.core.engine.sharded import ShardedFleetEngine
 from repro.core.engine.vectorized import VectorizedFleetEngine
 from repro.core.fleet import (
     FleetConfig,
@@ -30,7 +31,7 @@ from repro.core.offline import OfflineDB
 from repro.core.online import RecoveryConfig
 from repro.core.refresh import RefreshConfig
 
-VALID_ENGINES = ("threaded", "vectorized")
+VALID_ENGINES = ("threaded", "vectorized", "sharded")
 VALID_CONTENTION = ("auto", "exact", "indexed")
 
 
@@ -45,10 +46,12 @@ class EngineConfig:
 
     ``engine`` selects the scheduler: ``"threaded"`` is the original
     thread-per-session oracle, ``"vectorized"`` the event-loop engine that
-    scales to 1e5+ sessions.  ``contention`` tunes the vectorized engine's
-    shared-link bookkeeping: ``"auto"`` (default) is oracle-exact up to
-    1024 sessions and switches to the O(log N) indexed structure above;
-    ``"exact"``/``"indexed"`` force either side.
+    scales to 1e5+ sessions, and ``"sharded"`` the device-sharded engine
+    (per-shard event frontiers; bit-identical to the vectorized engine at
+    parity scale, bulk-synchronous windows above it).  ``contention`` tunes
+    the vectorized engine's shared-link bookkeeping: ``"auto"`` (default)
+    is oracle-exact up to 1024 sessions and switches to the O(log N)
+    indexed structure above; ``"exact"``/``"indexed"`` force either side.
     """
 
     engine: str = "threaded"
@@ -65,6 +68,13 @@ class EngineConfig:
     bulk_chunks: int = 8
     use_pallas: bool = False
     contention: str = "auto"  # vectorized engine only; threaded is always exact
+    # Sharded engine only.  ``n_shards=None`` resolves to the host's device
+    # count at run time; ``shard_window_s`` picks the execution regime:
+    # None = auto (strict frontier merge at parity scale, bulk-synchronous
+    # windows above the contention cutover), 0 = force strict at any scale,
+    # > 0 = force windowed with that window width.
+    n_shards: int | None = None
+    shard_window_s: float | None = None
     # Streaming knowledge service (core.service.KnowledgeService).  When set,
     # both engines resolve admission snapshots, fold completed sessions, and
     # ask for probe budgets through the service instead of the raw-DB +
@@ -85,6 +95,22 @@ class EngineConfig:
             raise ValueError(
                 f"unknown contention mode {self.contention!r}; valid modes: "
                 f"{', '.join(VALID_CONTENTION)}"
+            )
+        if self.n_shards is not None and self.n_shards < 1:
+            raise ValueError(
+                "n_shards must be >= 1 or None (host device count), "
+                f"got {self.n_shards}"
+            )
+        if self.shard_window_s is not None and self.shard_window_s < 0.0:
+            raise ValueError(
+                "shard_window_s must be >= 0 (0 forces the strict regime) "
+                f"or None (auto), got {self.shard_window_s}"
+            )
+        if self.engine != "sharded" and (
+            self.n_shards is not None or self.shard_window_s is not None
+        ):
+            raise ValueError(
+                "n_shards/shard_window_s only apply to engine='sharded'"
             )
         if self.max_concurrent is not None and self.max_concurrent <= 0:
             raise ValueError(
@@ -190,6 +216,8 @@ def run_fleet(
             "config must be EngineConfig, FleetConfig, or None, "
             f"got {type(config).__name__}"
         )
+    if config.engine == "sharded":
+        return ShardedFleetEngine(db, config).run(requests)
     if config.engine == "vectorized":
         return VectorizedFleetEngine(db, config).run(requests)
     return FleetScheduler(

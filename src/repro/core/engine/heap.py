@@ -10,9 +10,12 @@ which is what makes the two engines interleave identically.
 Scalar pushes and pops ride CPython's C-implemented ``heapq`` over ``(time,
 slot)`` tuples — profiling the engine at N=2e4 showed a hand-rolled
 numpy-scalar sift spending half the run in element access, while ``heapq``'s
-tuple comparisons run at C speed.  Batch insertion stays vectorized: an
-admission wave is ``np.lexsort``-ed in one shot (a sorted array satisfies
-the heap invariant) instead of N sift-ups.
+tuple comparisons run at C speed.  Batch insertion stays vectorized: the
+batch is ``np.lexsort``-ed in one shot and either becomes the heap directly
+(empty heap: a sorted array satisfies the heap invariant), is appended and
+re-heapified in one O(n+m) C pass (comparable sizes), or sift-pushed when it
+is tiny relative to the resident heap — never N Python-level sift-ups over
+an unsorted batch.
 """
 
 from __future__ import annotations
@@ -46,9 +49,13 @@ class VectorEventHeap:
     def push_batch(self, times_s, slot_ids) -> None:
         """Insert many events at once.
 
-        On an empty heap the batch is lexsorted in — one vectorized sort
-        instead of N sift-ups — which is how the engine seeds an admission
-        wave.  On a non-empty heap it falls back to scalar pushes.
+        The batch is always lexsorted in one vectorized pass.  On an empty
+        heap the sorted batch *is* the heap (a sorted array satisfies the
+        heap invariant) — how the engine seeds an admission wave.  On a
+        non-empty heap the sorted batch is appended and the whole list
+        re-heapified: one O(n+m) C-level pass instead of m sift-ups, unless
+        the batch is tiny relative to the resident heap, where m·log(n)
+        sifts of presorted events are cheaper than reheapifying n+m.
         """
         times_s = np.asarray(times_s, np.float64)
         slot_ids = np.asarray(slot_ids, np.int64)
@@ -56,12 +63,16 @@ class VectorEventHeap:
             raise ValueError("times_s and slot_ids must be equal-length 1-D")
         if times_s.shape[0] == 0:
             return
+        order = np.lexsort((slot_ids, times_s))
+        batch = list(zip(times_s[order].tolist(), slot_ids[order].tolist()))
         if not self._heap:
-            order = np.lexsort((slot_ids, times_s))
-            self._heap = list(zip(times_s[order].tolist(), slot_ids[order].tolist()))
-            return
-        for t, i in zip(times_s.tolist(), slot_ids.tolist()):
-            heapq.heappush(self._heap, (t, i))
+            self._heap = batch
+        elif len(batch) * 8 < len(self._heap):
+            for ev in batch:
+                heapq.heappush(self._heap, ev)
+        else:
+            self._heap.extend(batch)
+            heapq.heapify(self._heap)
 
     def peek(self) -> tuple[float, int]:
         if not self._heap:

@@ -176,6 +176,19 @@ class VectorizedFleetEngine:
         self.state: FleetStateArrays | None = None
 
     # ------------------------------------------------------------------ #
+    def _make_heap(self, n: int) -> VectorEventHeap:
+        """Event frontier for an N-slot fleet; the sharded engine overrides
+        this with a per-shard frontier merge (same push/pop contract, same
+        global ``(time, slot)`` order)."""
+        return VectorEventHeap(capacity=max(2 * n, 16))
+
+    def _query_cluster(self, i: int, link, dataset):
+        """Admission-time cluster snapshot for slot ``i`` on the raw-DB path
+        (no knowledge service).  The sharded engine overrides this with a
+        batch-precomputed assignment when the DB is frozen for the run —
+        which is why feature extraction happens inside the hook."""
+        return self.db.query(request_features(link, dataset))
+
     def _make_shared(self, link, n: int):
         mode = getattr(self.config, "contention", "auto")
         if mode == "exact" or (mode == "auto" and n <= AUTO_CONTENTION_CUTOVER):
@@ -250,7 +263,7 @@ class VectorizedFleetEngine:
         envs: list[TenantEnvironment | None] = [None] * n
         state = FleetStateArrays.allocate(n)
         self.state = state
-        heap = VectorEventHeap(capacity=max(2 * n, 16))
+        heap = self._make_heap(n)
         pending = collections.deque(
             sorted(range(n), key=lambda i: (reqs[i].start_clock_s, i))
         )
@@ -265,14 +278,14 @@ class VectorizedFleetEngine:
             state.admit_s[i] = admit_time[i]
             # Knowledge snapshot resolved at admission, in event order —
             # the same refresh-consistency point as the threaded engine.
-            feats = request_features(link, reqs[i].dataset)
             if knowledge is not None:
+                feats = request_features(link, reqs[i].dataset)
                 cluster = knowledge.query_cluster(None, feats)
                 budget = knowledge.probe_budget(
                     None, admit_time[i], cfg.max_samples
                 )
             else:
-                cluster = self.db.query(feats)
+                cluster = self._query_cluster(i, link, reqs[i].dataset)
                 budget = cfg.max_samples
             env = self._make_tenant_env(reqs[i], i, shared)
             env.clock_s = admit_time[i]

@@ -17,6 +17,7 @@ without a backoff policy probe exactly as before, bit for bit.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,8 +99,12 @@ class ProbePolicy:
         """
         cfg = self.config
         st = self._state(pair)
-        if rate_mbps <= 0.0:
-            # A collapsed/zero-rate session is volatility by definition.
+        if not math.isfinite(rate_mbps) or rate_mbps <= 0.0:
+            # A collapsed/zero-rate session is volatility by definition —
+            # and a non-finite rate (NaN slips through any `<= 0` guard,
+            # inf saturates the mean) is a broken measurement path, not a
+            # sample: folding either would poison the window mean and read
+            # as an ordinary noisy window instead of a fault.
             self.notify_fault(pair)
             return
         st.rates.append(float(rate_mbps))

@@ -71,8 +71,12 @@ class SurfaceCache:
     # ------------------------------------------------------------------ #
     # holds: _lock
     def _build(self, db: OfflineDB, k: int) -> _CacheEntry:
-        ck = db.clusters[k]
-        stack = ck.surface_stack(db.bounds)  # pre-warm the batched view
+        return self._build_from(db.clusters[k], db.bounds, k)
+
+    # holds: _lock
+    @staticmethod
+    def _build_from(ck: ClusterKnowledge, bounds, k: int) -> _CacheEntry:
+        stack = ck.surface_stack(bounds)  # pre-warm the batched view
         mid = stack.n_surfaces // 2  # median-load surface (ascending sort)
         cc, p, pp = (int(v) for v in stack.argmax_pts[mid])
         decision = AdmissionDecision(
@@ -107,10 +111,41 @@ class SurfaceCache:
             return ent.decision
 
     def warm(self, pair: tuple[str, str], db: OfflineDB) -> int:
-        """Pre-build every cluster decision for a pair; returns the count."""
-        for k in range(len(db.clusters)):
-            self.lookup(pair, db, k)
-        return len(db.clusters)
+        """Pre-build every cluster decision for a pair; returns the count.
+
+        One critical section, one ``db.clusters`` snapshot: warming used to
+        run a separate locked ``lookup`` per cluster, so an
+        ``OfflineDB.update`` landing mid-warm could leave the pair's entry
+        map spanning two knowledge generations — and a cluster-*count*
+        change between the initial ``len()`` and a later per-cluster build
+        raised ``IndexError`` inside ``_build``.  Every entry is now built
+        from the same snapshotted cluster list, and decisions for clusters
+        beyond the snapshot's count are dropped so the map never mixes
+        generations.
+        """
+        with self._lock:
+            clusters = list(db.clusters)
+            bounds = db.bounds
+            entry_map = self._pairs.pop(pair, None)
+            if entry_map is None:
+                entry_map = {}
+            self._pairs[pair] = entry_map  # pop/reinsert = move to MRU end
+            if len(self._pairs) > self.capacity:
+                self._pairs.pop(next(iter(self._pairs)))
+                self.evictions += 1
+            for k, ck in enumerate(clusters):
+                ent = entry_map.get(k)
+                if ent is not None and ent.cluster is ck:
+                    self.hits += 1
+                    continue
+                if ent is not None:
+                    self.invalidations += 1
+                else:
+                    self.misses += 1
+                entry_map[k] = self._build_from(ck, bounds, k)
+            for k in [k for k in entry_map if k >= len(clusters)]:
+                del entry_map[k]
+            return len(clusters)
 
     def stats(self) -> dict[str, int]:
         with self._lock:

@@ -20,6 +20,7 @@ import dataclasses
 import math
 from typing import Any
 
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.params import paths_from_tree, tree_from_paths
@@ -87,11 +88,26 @@ def spec_for(shape: tuple[int, ...], logical_axes: tuple, rules: dict,
             continue
         span = math.prod(mesh.shape[a] for a in axes)
         if dim % span != 0:
+            # Same degradation ladder as batch_sharding: drop outer axes
+            # (pod first) until a divisible prefix remains, instead of
+            # degrading straight to replicated.  An odd global batch on a
+            # pod x data mesh still shards over data.
+            kept = axes
+            while kept and dim % math.prod(mesh.shape[a] for a in kept) != 0:
+                kept = kept[1:]
             if report is not None:
-                report.note(path, name,
-                            f"indivisible dim {dim} % mesh {span} != 0")
-            entries.append(None)
-            continue
+                if kept:
+                    report.note(path, name,
+                                f"partial: dim {dim} % mesh {span} != 0; "
+                                f"dropped {axes[:len(axes) - len(kept)]}, "
+                                f"kept {kept}")
+                else:
+                    report.note(path, name,
+                                f"indivisible dim {dim} % mesh {span} != 0")
+            if not kept:
+                entries.append(None)
+                continue
+            axes = kept
         used.update(axes)
         entries.append(axes[0] if len(axes) == 1 else axes)
     while entries and entries[-1] is None:      # P("data") == spec, not
@@ -121,6 +137,29 @@ def batch_sharding(mesh, *, ndim: int, batch_size: int | None = None
     if not axes:
         return replicated(mesh)
     return NamedSharding(mesh, P(axes[0] if len(axes) == 1 else axes))
+
+
+def slot_shard(slot_id: int, n_shards: int) -> int:
+    """Shard owning one fleet slot: cyclic ``slot % n_shards``.
+
+    The single source of the fleet-engine partition rule.  Cyclic (rather
+    than contiguous-block) assignment keeps shards balanced as recovery
+    re-admissions append new slots at the high end, and needs no
+    divisibility negotiation — any fleet size lands within one slot of
+    perfectly even.
+    """
+    return int(slot_id) % int(n_shards)
+
+
+def slot_partition(n_slots: int, n_shards: int) -> np.ndarray:
+    """Vectorized ``slot -> shard`` assignment for a whole admission wave.
+
+    Row ``i`` is ``slot_shard(i, n_shards)``; the sharded fleet engine uses
+    it to split event batches across per-shard frontiers.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return np.arange(int(n_slots), dtype=np.int64) % int(n_shards)
 
 
 def tree_shardings(tree, axes_by_path: dict[str, tuple], mesh, rules: dict,

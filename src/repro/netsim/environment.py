@@ -445,6 +445,20 @@ class IndexedSharedLink:
         self._count += 1
         heapq.heappush(self._heap, (end_s, gen, tenant_id))
 
+    def live_flow(self, tenant_id: int) -> tuple[float, float] | None:
+        """``(rate_mbps, end_s)`` of a tenant's registered flow, or ``None``.
+
+        Reads the index without expiring — entries that survived the last
+        ``snapshot`` all end after it, so a caller holding that snapshot can
+        subtract its own contribution exactly.  The sharded fleet engine's
+        windowed link wrapper uses this to self-exclude against a frozen
+        window-start aggregate.
+        """
+        rate = self._rate.get(tenant_id)
+        if rate is None:
+            return None
+        return rate, self._end[tenant_id]
+
     def release(self, tenant_id: int) -> None:
         old = self._rate.pop(tenant_id, None)
         if old is not None:

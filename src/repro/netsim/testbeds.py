@@ -64,11 +64,21 @@ _TRAFFIC = {
 }
 
 
+def make_traffic(name: str, *, seed: int = 0,
+                 constant_load: float | None = None) -> DiurnalTraffic:
+    """The testbed's traffic process alone, no :class:`Environment`.
+
+    For engines that construct their own tenant environments and would
+    otherwise build (and throw away) a whole base environment just to read
+    its traffic model off ``make_testbed``.
+    """
+    if constant_load is not None:
+        return DiurnalTraffic.constant(constant_load)
+    return DiurnalTraffic(seed=seed + 17, **_TRAFFIC[name])
+
+
 def make_testbed(name: str, *, seed: int = 0,
                  constant_load: float | None = None) -> Environment:
     link = TESTBEDS[name]
-    if constant_load is not None:
-        traffic = DiurnalTraffic.constant(constant_load)
-    else:
-        traffic = DiurnalTraffic(seed=seed + 17, **_TRAFFIC[name])
+    traffic = make_traffic(name, seed=seed, constant_load=constant_load)
     return Environment(link, traffic, seed=seed)

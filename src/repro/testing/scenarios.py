@@ -143,8 +143,10 @@ def run_scenario(db, sc: Scenario, *, recovery: bool | None = None,
     """Run one scenario against a pre-built DB via the ``run_fleet`` facade.
 
     ``recovery`` overrides the scenario's own flag (the on-vs-off
-    comparisons use this); ``engine`` selects the scheduler (the
-    threaded-vs-vectorized parity tests run every cell through both).
+    comparisons use this); ``engine`` selects the scheduler — the
+    engine-parity tests run every cell through ``"threaded"``,
+    ``"vectorized"``, and ``"sharded"`` (strict regime) and assert
+    bit-identical traces.
     ``service=True`` routes knowledge through a ``KnowledgeService``
     (streaming ingest in place of the cadence refresher) — opt-in, so the
     default path stays bit-identical to the legacy golden traces."""

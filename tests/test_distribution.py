@@ -50,6 +50,32 @@ def test_spec_degrades_non_divisible():
     assert rep.degraded
 
 
+def test_spec_partial_prefix_drop_keeps_divisible_suffix():
+    mesh = _FakeMesh({"pod": 2, "data": 4, "model": 16})
+    rules = default_rules(True)
+    rep = ShardingReport()
+    # 12 doesn't divide pod*data = 8 — but instead of degrading straight to
+    # replicated, the outer pod axis drops and the batch still shards 4-way.
+    spec = spec_for((12, 64), ("batch", None), rules, mesh, rep, "x")
+    assert spec == P("data")
+    assert len(rep.degraded) == 1
+    path, axis, why = rep.degraded[0]
+    assert (path, axis) == ("x", "batch")
+    assert why.startswith("partial:")
+    assert "kept ('data',)" in why
+
+
+def test_spec_indivisible_after_all_drops_replicates():
+    mesh = _FakeMesh({"pod": 2, "data": 4})
+    rules = default_rules(True)
+    rep = ShardingReport()
+    # 7 divides neither 8, nor 4 after the pod drop -> fully replicated.
+    spec = spec_for((7,), ("batch",), rules, mesh, rep, "y")
+    assert spec == P()
+    assert len(rep.degraded) == 1
+    assert "indivisible" in rep.degraded[0][2]
+
+
 def test_spec_one_axis_per_tensor():
     mesh = _FakeMesh({"data": 16, "model": 16})
     rules = default_rules(False)

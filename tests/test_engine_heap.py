@@ -66,6 +66,34 @@ def test_push_batch_onto_nonempty_heap_keeps_global_order():
     assert drain(h) == [(0.1, 8), (0.5, 2), (3.0, 7), (5.0, 0), (5.0, 1)]
 
 
+def test_tiny_batch_onto_large_heap_matches_scalar_pushes():
+    # 3 * 8 < 400 takes the per-event sift path rather than the full
+    # reheapify; both must leave an indistinguishable pop sequence.
+    rng = np.random.default_rng(9)
+    times = rng.uniform(0.0, 100.0, size=400).round(1)
+    ids = rng.permutation(400)
+    extra = [(0.05, 401), (50.0, 402), (99.95, 403)]
+    batched = VectorEventHeap()
+    batched.push_batch(times, ids)
+    batched.push_batch([t for t, _ in extra], [i for _, i in extra])
+    scalar = VectorEventHeap()
+    for t, i in zip(times, ids):
+        scalar.push(float(t), int(i))
+    for t, i in extra:
+        scalar.push(t, i)
+    assert drain(batched) == drain(scalar)
+
+
+def test_push_batch_rejects_mismatched_shapes():
+    h = VectorEventHeap()
+    with pytest.raises(ValueError):
+        h.push_batch([1.0, 2.0], [1])
+    with pytest.raises(ValueError):
+        h.push_batch([[1.0]], [[1]])
+    h.push_batch([], [])  # empty batch is a no-op
+    assert len(h) == 0
+
+
 def test_interleaved_push_pop_times_never_go_backwards():
     rng = np.random.default_rng(3)
     h = VectorEventHeap()

@@ -211,6 +211,49 @@ def test_cache_lru_eviction_deterministic(db):
     assert st == go()
 
 
+class _MidSwapDB:
+    """OfflineDB stand-in whose cluster list changes generation between
+    attribute reads — the refresh race ``warm`` must be atomic against."""
+
+    def __init__(self, generations, bounds):
+        self._generations = list(generations)
+        self.bounds = bounds
+
+    @property
+    def clusters(self):
+        gen = self._generations[0]
+        if len(self._generations) > 1:
+            self._generations.pop(0)
+        return gen
+
+
+def test_cache_warm_is_atomic_across_mid_warm_update(db, history):
+    # The second generation is a fresh fit with fewer clusters: a warm
+    # that re-read ``db.clusters`` per cluster would either IndexError
+    # (count shrank under it) or leave one pair's entry map spanning two
+    # knowledge generations.  Atomic warm sees only its first snapshot.
+    gen2 = _db(history, seed=1).clusters[: max(1, len(db.clusters) - 2)]
+    swap = _MidSwapDB([list(db.clusters), list(gen2)], db.bounds)
+    cache = SurfaceCache()
+    pair = ("x", "y")
+    assert cache.warm(pair, swap) == len(db.clusters)
+    entries = cache._pairs[pair]
+    assert set(entries) == set(range(len(db.clusters)))
+    assert all(entries[k].cluster is db.clusters[k] for k in entries)
+
+
+def test_cache_warm_drops_entries_beyond_shrunken_generation(db):
+    cache = SurfaceCache()
+    pair = ("x", "y")
+    cache.warm(pair, db)
+    small = _MidSwapDB([list(db.clusters[:2])], db.bounds)
+    assert cache.warm(pair, small) == 2
+    # stale high-index entries are gone; surviving ones are cache hits
+    # against the unchanged cluster objects, not rebuilds
+    assert set(cache._pairs[pair]) == {0, 1}
+    assert cache.stats()["hits"] == 2
+
+
 def test_cache_warm_prebuilds_all_clusters(db):
     svc = KnowledgeService(db)
     n = svc.warm()
@@ -295,6 +338,30 @@ def test_probe_policy_zero_rate_counts_as_fault():
     pol.probe_budget(pair, 0.0, 3)
     pol.observe(pair, 0.0)
     assert pol.probe_budget(pair, 1.0, 3) == 3  # interval clock cleared
+
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), float("-inf")])
+def test_probe_policy_nonfinite_rate_counts_as_fault(bad):
+    # NaN slips through any `<= 0` guard and inf saturates the window mean:
+    # either poisons the variance decision if folded as a sample.  Both are
+    # broken measurements and must reset like a fault instead.
+    cfg = ProbeBackoffConfig(base_interval_s=100.0, growth=2.0, window=2)
+    pol = ProbePolicy(cfg)
+    pair = ("a", "b")
+    pol.observe(pair, 1000.0)
+    pol.observe(pair, 1000.0)  # one quiet window: backed off
+    assert pol.interval_s(pair) == 200.0
+    pol.probe_budget(pair, 0.0, 3)
+    pol.observe(pair, 1000.0)  # half-filled window...
+    pol.observe(pair, bad)  # ...then the broken measurement lands
+    assert pol.interval_s(pair) == 100.0  # snapped back to base
+    assert pol.stats()["resets"] == 1
+    assert pol.probe_budget(pair, 1.0, 3) == 3  # next session probes fully
+    # The window was cleared with the bad sample never folded: the next
+    # two clean observations form a complete quiet window again.
+    pol.observe(pair, 1000.0)
+    pol.observe(pair, 1000.0)
+    assert pol.interval_s(pair) == 200.0
 
 
 # ------------------------ fleet golden traces -------------------------- #
